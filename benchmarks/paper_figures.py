@@ -1,0 +1,224 @@
+"""One benchmark per paper figure (Figures 1, 6, 7, 8, 9, 10).
+
+Default mode is *reduced* (fewer repeats/epochs, smaller train set) so the
+whole harness runs on CPU in minutes; ``--full`` restores the paper's counts
+(300 retrains, 10 repeats, 112800 samples, N_R=160).
+
+Dataset note: real EMNIST is not shipped offline; the synthetic EMNIST-like
+task (repro.data.images) is used, with the right-phase/recovery learning
+rates adapted for stability (see DESIGN.md §2.4 and PaperHP docstring).
+Claims are validated *qualitatively* against the paper's figures and recorded
+in EXPERIMENTS.md §Paper-claims.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pnn, sil as sil_lib
+from repro.core.losses import cross_entropy
+from repro.data.images import emnist_like
+from repro.models import mlp as MLP
+from repro.models.mlp import MLPConfig
+from repro.optim import make_optimizer
+
+
+def _data(full):
+    n = 112800 if full else 28200
+    return emnist_like(n_train=n, n_test=4700, seed=0, noise=0.5)
+
+
+def _hp(full, **kw):
+    base = dict(n_left=5, n_right=160 if full else 60,
+                n_baseline=40 if full else 20, batch_size=1410,
+                lr=0.01, lr_right=0.003, kappa=10.0)
+    base.update(kw)
+    return pnn.PaperHP(**base)
+
+
+# -- Figure 1: weight randomness after training -----------------------------
+
+def fig1_weight_randomness(full=False, seed=0):
+    """Retrain a 3-layer (100, 50, 10) net repeatedly; histogram stats of the
+    intermediate layer's max/min weight.  Claim C0: the spread stays wide
+    (training does not erase init randomness)."""
+    n_runs = 300 if full else 12
+    epochs = 15 if full else 5
+    cfg = MLPConfig(sizes=(784, 100, 50, 10), cut=1, n_classes=10)
+    tx, ty, _, _ = emnist_like(n_train=11280, n_test=10, seed=seed)
+    ty = ty % 10
+    maxw, minw = [], []
+    for r in range(n_runs):
+        params = MLP.init_params(cfg, jax.random.PRNGKey(1000 + r))
+        opt = make_optimizer("sgdm", 0.01, momentum=0.9)
+        st = opt.init(params)
+
+        @jax.jit
+        def step(p, s_, x, y):
+            def loss_fn(p_):
+                return cross_entropy(MLP.forward(cfg, p_, x), y)
+            l, g = jax.value_and_grad(loss_fn)(p)
+            p2, s2 = opt.update(g, s_, p)
+            return p2, s2, l
+        for ep in range(epochs):
+            for i in range(0, 11280 - 256, 256):
+                params, st, _ = step(params, st, tx[i:i+256], ty[i:i+256])
+        w = np.asarray(params[1]["w"])  # intermediate layer
+        maxw.append(w.max())
+        minw.append(w.min())
+    return {
+        "n_runs": n_runs,
+        "max_weight_mean": float(np.mean(maxw)),
+        "max_weight_std": float(np.std(maxw)),
+        "min_weight_mean": float(np.mean(minw)),
+        "min_weight_std": float(np.std(minw)),
+        "range_mean": float(np.mean(np.array(maxw) - np.array(minw))),
+        "randomness_persists": bool(np.std(maxw) > 1e-3),
+    }
+
+
+# -- Figure 6: PNN vs baseline accuracy-vs-MACs ------------------------------
+
+def fig6_pnn_vs_baseline(full=False, repeats=None):
+    reps = repeats or (10 if full else 3)
+    data = _data(full)
+    hp = _hp(full)
+    accs_b, accs_p, curves = [], [], []
+    for r in range(reps):
+        _, hb = pnn.train_mlp_baseline(MLPConfig(), data, hp,
+                                       jax.random.PRNGKey(r), eval_every=5)
+        _, hpn = pnn.train_mlp_pnn(MLPConfig(), data, hp,
+                                   jax.random.PRNGKey(100 + r),
+                                   eval_every=10)
+        accs_b.append(hb["acc"][-1])
+        accs_p.append(hpn["acc"][-1])
+        curves.append(hpn)
+    return {
+        "baseline_acc_mean": float(np.mean(accs_b)),
+        "baseline_acc_std": float(np.std(accs_b)),
+        "pnn_acc_mean": float(np.mean(accs_p)),
+        "pnn_acc_std": float(np.std(accs_p)),
+        "pnn_macs": curves[0]["macs"][-1],
+        "baseline_macs": None,
+        "comparable": bool(np.mean(accs_p) > 0.8 * np.mean(accs_b)),
+    }
+
+
+# -- Figure 7: effect of N_L ------------------------------------------------
+
+def fig7_nl_sweep(full=False):
+    data = _data(full)
+    out = {}
+    for kappa in (2.0, 10.0):
+        accs = []
+        for n_l in ([1, 2, 5, 10, 20] if full else [1, 3, 8]):
+            # right-phase lr scaled by the kappa<->lr analogy so both kappa
+            # settings train stably (boundary scale ~ kappa)
+            hp = _hp(full, n_left=n_l, kappa=kappa, lr_right=0.03 / kappa)
+            _, h = pnn.train_mlp_pnn(MLPConfig(), data, hp,
+                                     jax.random.PRNGKey(n_l), eval_every=1000)
+            accs.append((n_l, h["acc"][-1]))
+        out[f"kappa={kappa}"] = accs
+    return out
+
+
+# -- Figure 8: effect of kappa ----------------------------------------------
+
+def fig8_kappa_sweep(full=False):
+    data = _data(full)
+    kappas = [0.1, 0.5, 1, 2, 5, 10, 20, 50, 200] if full \
+        else [0.1, 1, 10, 50]
+    accs = []
+    for k in kappas:
+        hp = _hp(full, kappa=k)
+        _, h = pnn.train_mlp_pnn(MLPConfig(), data, hp,
+                                 jax.random.PRNGKey(7), eval_every=1000)
+        accs.append((k, h["acc"][-1]))
+    best = max(a for _, a in accs)
+    lo = accs[0][1]
+    return {"sweep": accs, "optimum_exists":
+            bool(best > lo + 0.02 and best > accs[-1][1] - 0.05)}
+
+
+# -- Figure 9: kappa <-> learning-rate equivalence ---------------------------
+
+def fig9_kappa_lr_equivalence(full=False):
+    """Paper claim C4: (kappa=10, lr=0.01) vs (kappa=1, lr=0.1) curves match
+    with R^2 > 0.99 on EMNIST.
+
+    FINDING: on the synthetic EMNIST substitute this equivalence does NOT
+    reproduce (R^2 << 0) — kappa=10 makes the right phase unstable at any
+    matched lr while kappa=1 + lr=0.1 trains cleanly, i.e. the analogy is
+    data-dependent, not structural.  The analytic core (SIL-MSE loss, hence
+    gradient scale, goes as kappa^2) IS validated in
+    tests/test_property.py::test_sil_loss_scales_quadratically.  Reported
+    honestly in EXPERIMENTS.md §Paper-claims."""
+    data = _data(full)
+    hp_a = _hp(full, kappa=10.0, lr=0.01, lr_right=None)   # paper-exact pair
+    hp_b = _hp(full, kappa=1.0, lr=0.1, lr_right=None)
+    _, ha = pnn.train_mlp_pnn(MLPConfig(), data, hp_a, jax.random.PRNGKey(0),
+                              eval_every=5)
+    _, hb = pnn.train_mlp_pnn(MLPConfig(), data, hp_b, jax.random.PRNGKey(0),
+                              eval_every=5)
+    a = np.array(ha["acc"])
+    b = np.array(hb["acc"])
+    n = min(len(a), len(b))
+    a, b = a[:n], b[:n]
+    ss_res = np.sum((a - b) ** 2)
+    ss_tot = np.sum((a - np.mean(a)) ** 2) + 1e-12
+    r2 = 1.0 - ss_res / ss_tot
+    return {"r2": float(r2), "final_a": float(a[-1]), "final_b": float(b[-1]),
+            "reproduced": bool(r2 > 0.9),
+            "note": "kappa-lr analogy is data-dependent; see docstring"}
+
+
+# -- Figure 10: recovery phase ----------------------------------------------
+
+def fig10_recovery(full=False):
+    data = _data(full)
+    hp = _hp(full, n_recovery=10 if full else 5,
+             n_right=160 if full else 100, lr_recovery=1e-4)
+    _, h = pnn.train_mlp_pnn(MLPConfig(), data, hp, jax.random.PRNGKey(0),
+                             eval_every=10)
+    acc_right = max(a for a, ph in zip(h["acc"], h["phase"])
+                    if ph == "right")
+    acc_rec = h["acc"][-1]
+    return {"acc_after_right": float(acc_right),
+            "acc_after_recovery": float(acc_rec),
+            "recovery_improves": bool(acc_rec >= acc_right - 0.005)}
+
+
+ALL_FIGURES = {
+    "fig1_weight_randomness": fig1_weight_randomness,
+    "fig6_pnn_vs_baseline": fig6_pnn_vs_baseline,
+    "fig7_nl_sweep": fig7_nl_sweep,
+    "fig8_kappa_sweep": fig8_kappa_sweep,
+    "fig9_kappa_lr_equivalence": fig9_kappa_lr_equivalence,
+    "fig10_recovery": fig10_recovery,
+}
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/paper_figures.json")
+    args = ap.parse_args()
+    results = {}
+    for name, fn in ALL_FIGURES.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        results[name] = fn(full=args.full)
+        results[name]["elapsed_s"] = round(time.time() - t0, 1)
+        print(name, json.dumps(results[name], default=str))
+    import os
+    os.makedirs("results", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)

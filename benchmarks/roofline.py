@@ -1,0 +1,151 @@
+"""Roofline reporter: turns results/dryrun.json into the §Roofline tables.
+
+    compute_s    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory_s     = HLO_bytes / HBM_bw               (per chip)
+    collective_s = collective_bytes / ICI link bw   (per chip)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+HLO_bytes comes from XLA's cost model ("bytes accessed") and over-counts
+reuse (it is op-level logical traffic, not DRAM traffic) — treat memory_s as
+an upper bound; the iteration log tracks its *delta*, which is meaningful.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ICI_BW = 50e9
+COLLECTIVE_LATENCY_S = 1e-6  # per-op ICI latency floor (launch+hop)
+
+
+def coll_seconds(analysis):
+    """Bandwidth + per-op latency model (tiny-collective regimes are
+    latency-bound; bytes/BW alone hides that)."""
+    c = analysis["collectives"]
+    return (c["total_bytes"] / ICI_BW
+            + c["total_count"] * COLLECTIVE_LATENCY_S)
+
+
+def load(path="results/dryrun.json") -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def table(results, mesh="single", mode="baseline", variant="plain"):
+    rows = []
+    seen = {}
+    for key, rec in results.items():
+        arch, shape, m, md, var = key.split("|")
+        if m != mesh or md != mode or var != variant:
+            continue
+        seen[(arch, shape)] = rec
+    for (arch, shape), rec in sorted(seen.items(),
+                                     key=lambda kv: (kv[0][0],
+                                                     ORDER.index(kv[0][1]))):
+        if rec["status"] == "skipped":
+            rows.append([arch, shape, "skipped", "", "", "", "", "", ""])
+            continue
+        if rec["status"] != "ok":
+            rows.append([arch, shape, "ERROR", "", "", "", "", "", ""])
+            continue
+        a = rec["analysis"]
+        mf = rec.get("model_flops_per_chip", 0)
+        ratio = rec.get("useful_flops_ratio", 0)
+        cs = coll_seconds(a)
+        terms = {"compute": a["compute_s"], "memory": a["memory_s"],
+                 "collective": cs}
+        rows.append([
+            arch, shape,
+            fmt_s(a["compute_s"]), fmt_s(a["memory_s"]),
+            fmt_s(cs),
+            max(terms, key=terms.get),
+            f"{ratio:.2f}" if ratio else "-",
+            f"{rec.get('params_bytes_per_chip', 0)/2**30:.2f}",
+            str(a["collectives"]["total_count"]),
+        ])
+    return rows
+
+
+def markdown(rows, title):
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "useful-FLOPs | params GiB/chip | #coll |")
+    sep = "|" + "---|" * 9
+    lines = [f"### {title}", "", hdr, sep]
+    for r in rows:
+        lines.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(lines)
+
+
+def pnn_table(results):
+    lines = ["### PNN stage steps vs conventional baseline (train_4k, "
+             "single pod)", "",
+             "| arch | stage | params GiB/chip | opt GiB/chip | "
+             "collective | #coll |", "|---|---|---|---|---|---|"]
+    for key, rec in sorted(results.items()):
+        arch, shape, m, md, var = key.split("|")
+        if md != "pnn" or shape != "train_4k" or rec.get("status") != "ok":
+            continue
+        for st in rec.get("pnn_stages", []):
+            a = st["analysis"]
+            lines.append(
+                f"| {arch} | {st['stage']} | "
+                f"{st['stage_params_bytes_per_chip']/2**30:.2f} | "
+                f"{st['stage_opt_bytes_per_chip']/2**30:.2f} | "
+                f"{fmt_s(a['collective_s'])} | "
+                f"{a['collectives']['total_count']} |")
+    return "\n".join(lines)
+
+
+def fit_table(results, mesh="single"):
+    """Analytic HBM-peak fit check vs the 16 GiB v5e budget."""
+    import sys as _sys
+    _sys.path.insert(0, "src")
+    from repro.configs import INPUT_SHAPES, get
+    from repro.launch.hlo_analysis import analytic_peak_bytes_per_chip
+    from repro.launch.specs import arch_for_shape
+    lines = ["### HBM fit (analytic peak, v5e = 16 GiB/chip)", "",
+             "| arch | shape | peak GiB/chip | fits |", "|---|---|---|---|"]
+    for key, rec in sorted(results.items()):
+        arch, shape, m, md, var = key.split("|")
+        if m != mesh or md != "baseline" or var != "plain" \
+                or rec.get("status") != "ok":
+            continue
+        cfg = arch_for_shape(get(arch), INPUT_SHAPES[shape])
+        peak = analytic_peak_bytes_per_chip(
+            cfg, INPUT_SHAPES[shape], rec["n_chips"],
+            params_bytes_per_chip=rec.get("params_bytes_per_chip", 0),
+            opt_bytes_per_chip=rec.get("opt_bytes_per_chip", 0),
+            cache_bytes_per_chip=rec.get("cache_bytes_per_chip", 0),
+            accum=rec.get("accum", 1)) / 2 ** 30
+        lines.append(f"| {arch} | {shape} | {peak:.2f} | "
+                     f"{'YES' if peak <= 16 else '**NO**'} |")
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    results = load(path)
+    print(markdown(table(results, "single"), "Single-pod 16x16 (256 chips)"))
+    print()
+    print(markdown(table(results, "multi"),
+                   "Multi-pod 2x16x16 (512 chips)"))
+    print()
+    print(pnn_table(results))
+    print()
+    print(fit_table(results))
+
+
+if __name__ == "__main__":
+    main()

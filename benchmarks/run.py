@@ -1,0 +1,139 @@
+"""Benchmark harness entry point: one function per paper figure plus the
+wall-clock microbenches of the core training paths.
+
+Prints ``name,us_per_call,derived`` CSV (one line per benchmark).  The paper
+figures run in reduced mode here (minutes on CPU); ``python -m
+benchmarks.paper_figures --full`` reproduces the paper-fidelity versions.
+Roofline tables come from ``python -m benchmarks.roofline`` (reads the
+dry-run JSON).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def _timeit(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_figures():
+    from benchmarks import paper_figures as F
+    rows = []
+    spec = [
+        ("fig1_weight_randomness",
+         lambda r: f"max_w_std={r['max_weight_std']:.4f};"
+                   f"persists={r['randomness_persists']}"),
+        ("fig6_pnn_vs_baseline",
+         lambda r: f"pnn={r['pnn_acc_mean']:.3f}+-{r['pnn_acc_std']:.3f};"
+                   f"base={r['baseline_acc_mean']:.3f}"),
+        ("fig7_nl_sweep",
+         lambda r: ";".join(f"k{k.split('=')[1]}:"
+                            + "/".join(f"{a:.2f}" for _, a in v)
+                            for k, v in r.items())),
+        ("fig8_kappa_sweep",
+         lambda r: "optimum=" + str(r["optimum_exists"]) + ";" + ";".join(
+             f"k{k}={a:.2f}" for k, a in r["sweep"])),
+        ("fig9_kappa_lr_equivalence",
+         lambda r: f"r2={r['r2']:.3f}"),
+        ("fig10_recovery",
+         lambda r: f"right={r['acc_after_right']:.3f};"
+                   f"rec={r['acc_after_recovery']:.3f};"
+                   f"improves={r['recovery_improves']}"),
+    ]
+    for name, derive in spec:
+        t0 = time.time()
+        res = F.ALL_FIGURES[name](full=False)
+        us = (time.time() - t0) * 1e6
+        rows.append((name, us, derive(res)))
+    return rows
+
+
+def bench_core_paths():
+    """Wall-clock per-call microbenches of the production step builders."""
+    from repro.configs import get
+    from repro.core import partition
+    from repro.launch.steps import (build_decode_step, build_pnn_stage_step,
+                                    build_prefill_step, build_train_step)
+    from repro.models import model as M
+    from repro.optim import make_optimizer
+
+    rows = []
+    cfg = get("qwen2-1.5b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", 1e-3)
+    state = opt.init(params)
+    batch = {"tokens": jnp.ones((4, 128), jnp.int32),
+             "labels": jnp.ones((4, 128), jnp.int32)}
+    step = jax.jit(build_train_step(cfg, opt))
+    us = _timeit(step, params, state, batch)
+    toks = 4 * 128
+    rows.append(("train_step_smoke", us, f"tokens_per_s={toks/us*1e6:.0f}"))
+
+    prefill = jax.jit(build_prefill_step(cfg, cache_len=160))
+    us = _timeit(prefill, params, {"tokens": batch["tokens"]})
+    rows.append(("prefill_smoke", us, f"tokens_per_s={toks/us*1e6:.0f}"))
+
+    _, cache, pos = prefill(params, {"tokens": batch["tokens"]})
+    decode = jax.jit(build_decode_step(cfg))
+    tok = jnp.ones((4,), jnp.int32)
+    us = _timeit(decode, params, cache, tok, pos)
+    rows.append(("decode_step_smoke", us, f"tokens_per_s={4/us*1e6:.0f}"))
+
+    plan = partition.make_plan(cfg, 2)
+    sp = partition.slice_stage_params(cfg, plan, params, 0)
+    sopt = make_optimizer("adamw", 1e-3)
+    sstate = sopt.init(sp)
+    sil = jnp.ones((cfg.d_model, cfg.vocab_padded), jnp.float32)
+    sstep = jax.jit(build_pnn_stage_step(cfg, plan, 0, sopt))
+    us = _timeit(sstep, sp, sstate, {"tokens": batch["tokens"]},
+                 batch["labels"], sil)
+    rows.append(("pnn_stage0_step_smoke", us,
+                 f"tokens_per_s={toks/us*1e6:.0f}"))
+    return rows
+
+
+def bench_kernels():
+    from repro.kernels.flash_attention.kernel import flash_attention_tpu
+    from repro.kernels.flash_attention import ref as fa_ref
+    from repro.kernels.sil_mse.kernel import sil_mse_fwd_tpu
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 512, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 512, 2, 64), jnp.float32)
+    us_ref = _timeit(lambda: fa_ref.chunked_attention(q, k, v), reps=3)
+    rows.append(("flash_attention_jnp_ref", us_ref, "512tok_interpret_basis"))
+    us_pal = _timeit(lambda: flash_attention_tpu(q, k, v), reps=1, warmup=1)
+    rows.append(("flash_attention_pallas_interpret", us_pal,
+                 "correctness_mode_not_perf"))
+    act = jax.random.normal(ks[0], (2048, 256), jnp.float32)
+    sil = jax.random.uniform(ks[1], (256, 1024)) * 10
+    lab = jax.random.randint(ks[2], (2048,), 0, 1024)
+    us = _timeit(lambda: sil_mse_fwd_tpu(act, sil, lab), reps=1, warmup=1)
+    rows.append(("sil_mse_pallas_interpret", us, "fused_loss+grad"))
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in (bench_core_paths, bench_kernels, bench_figures):
+        for name, us, derived in fn():
+            print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Checkpointing: pytree <-> npz + JSON manifest.
+
+Arrays are gathered to host (sharded arrays included — restore re-shards via
+``jax.device_put`` with the target sharding when provided).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = jnp.bfloat16.dtype
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, metadata=None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    # npz can't roundtrip ml_dtypes (bfloat16 etc.) — store as uint16 views
+    # and record the real dtype in the manifest
+    stored = {k: (v.view(np.uint16) if v.dtype == _BF16 else v)
+              for k, v in arrays.items()}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **stored)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Any:
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    z = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
+        manifest = json.load(f)
+    flat_like, treedef = _flatten_with_paths(like)
+    leaves = []
+    flat_shard = None
+    if shardings is not None:
+        flat_shard, _ = _flatten_with_paths(shardings)
+    for key in flat_like:
+        arr = z[key]
+        if manifest["dtypes"].get(key) == "bfloat16":
+            arr = arr.view(_BF16)
+        if flat_shard is not None:
+            arr = jax.device_put(arr, flat_shard[key])
+        leaves.append(arr)
+    # rebuild in treedef order: _flatten_with_paths preserves flatten order
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [leaves[i] for i in range(len(leaves))])
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

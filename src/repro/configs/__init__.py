@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_NAMES, INPUT_SHAPES, InputShape, ModelConfig, MoEConfig, SSMConfig,
+    XLSTMConfig, get)

@@ -1,0 +1,60 @@
+"""Losses: stable cross-entropy, the SIL-MSE stage loss, and the combined
+training objective (CE + MoE auxiliaries)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sil_mse import sil_mse
+
+
+def cross_entropy(logits, labels, mask=None, vocab_size=None):
+    """Mean token CE. logits (..., V) any float dtype; labels int (...).
+
+    vocab_size: real vocab when logits carry padded columns (masked out)."""
+    lf = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < lf.shape[-1]:
+        pad_mask = jnp.arange(lf.shape[-1]) < vocab_size
+        lf = jnp.where(pad_mask, lf, -1e30)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()
+
+
+def accuracy(logits, labels, mask=None):
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == labels).astype(jnp.float32)
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (hit * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return hit.mean()
+
+
+def sil_stage_loss(boundary_act, sil, labels):
+    """Paper's left-partition loss: MSE(boundary, SIL[:, y]).
+
+    boundary_act: (..., d); labels: int (...) matching leading dims.
+    Tokens are flattened; goes through the fused kernel path.
+    """
+    d = boundary_act.shape[-1]
+    act = boundary_act.reshape(-1, d)
+    lab = labels.reshape(-1)
+    return sil_mse(act, sil, lab)
+
+
+def train_objective(cfg, logits, labels, aux, mask=None):
+    """CE + MoE auxiliary losses (coefficients from the MoE config)."""
+    loss = cross_entropy(logits, labels, mask,
+                         vocab_size=getattr(cfg, "vocab_size", None))
+    metrics = {"ce": loss}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.load_balance_loss * aux["lb_loss"] \
+            + cfg.moe.router_z_loss * aux["z_loss"]
+        metrics["lb"] = aux["lb_loss"]
+        metrics["z"] = aux["z_loss"]
+    metrics["loss"] = loss
+    return loss, metrics

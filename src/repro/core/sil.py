@@ -1,0 +1,38 @@
+"""Synthetic Intermediate Labels (paper §2, Eq. 1).
+
+    SIL[i, j] ~ kappa * U(0, 1),   SIL in R^{N_P x M}
+
+Column j is the synthetic target activation (width N_P = boundary features)
+for every sample of class j.  For language models the "class" of a token
+position is its next-token id, so M = vocab and the SIL is structurally a
+random unembedding table; the table is keyed by label id, which makes it
+order-free (the paper instead relies on unshuffled data order — equivalent,
+see DESIGN.md §2.4).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def make_sil(key, n_features: int, n_classes: int, kappa: float,
+             dtype=jnp.float32):
+    """Eq. 1: (N_P, M) matrix with entries kappa * U(0,1)."""
+    return (kappa * jax.random.uniform(key, (n_features, n_classes),
+                                       jnp.float32)).astype(dtype)
+
+
+def make_stage_sils(key, widths: Sequence[int], n_classes: int, kappa: float,
+                    dtype=jnp.float32):
+    """One SIL per interior cut. widths[k] = boundary feature count of cut k
+    (the output width of stage k, for k = 0..n_stages-2)."""
+    keys = jax.random.split(key, max(len(widths), 1))
+    return [make_sil(k, w, n_classes, kappa, dtype)
+            for k, w in zip(keys, widths)]
+
+
+def sil_lookup(sil, labels):
+    """Synthetic target activations for `labels` (any int shape) -> (*, N_P)."""
+    return jnp.moveaxis(sil[:, labels], 0, -1)

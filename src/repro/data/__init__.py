@@ -1,0 +1,3 @@
+from .images import emnist_like, load_emnist  # noqa: F401
+from .lm import synthetic_token_stream, lm_batches  # noqa: F401
+from .loader import Batches  # noqa: F401

@@ -1,0 +1,41 @@
+"""Batched host->device loading with optional shuffling and sharding.
+
+The paper trains the left partition *without shuffling* so SIL targets stay
+aligned with sample order; we instead key SIL by label id (order-free), but
+``shuffle=False`` reproduces the paper's exact regime.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class Batches:
+    def __init__(self, arrays, batch_size: int, *, shuffle: bool = True,
+                 seed: int = 0, drop_last: bool = True, sharding=None):
+        self.arrays = [np.asarray(a) for a in arrays]
+        self.n = len(self.arrays[0])
+        assert all(len(a) == self.n for a in self.arrays)
+        self.batch_size = batch_size
+        self.shuffle = shuffle
+        self.seed = seed
+        self.drop_last = drop_last
+        self.sharding = sharding
+
+    def __len__(self):
+        return self.n // self.batch_size if self.drop_last else \
+            -(-self.n // self.batch_size)
+
+    def epoch(self, epoch_idx: int = 0) -> Iterator:
+        order = np.arange(self.n)
+        if self.shuffle:
+            np.random.RandomState(self.seed + epoch_idx).shuffle(order)
+        stop = self.n - (self.n % self.batch_size) if self.drop_last else self.n
+        for i in range(0, stop, self.batch_size):
+            idx = order[i:i + self.batch_size]
+            out = [a[idx] for a in self.arrays]
+            if self.sharding is not None:
+                out = [jax.device_put(a, self.sharding) for a in out]
+            yield tuple(out)

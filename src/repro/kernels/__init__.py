@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (with pure-jnp oracles) for the perf-critical paths.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (dispatching
+jit'd wrapper), ref.py (pure-jnp oracle used for tests and CPU lowering).
+"""
+from .flash_attention import flash_attention, decode_attention  # noqa: F401
+from .selective_scan import selective_scan, selective_scan_step  # noqa: F401
+from .sil_mse import sil_mse  # noqa: F401

@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (forward) with causal + sliding-window masking.
+
+Blocking: grid (batch, q_heads, Sq/BQ, Sk/BK); the KV axis is the minor-most
+grid dim, iterated sequentially per TPU core, so the online-softmax running
+state (m, l, acc) lives in VMEM scratch across KV steps.  Q/K/V blocks are
+(BQ, D) / (BK, D) VMEM tiles (BQ = BK = 128, MXU-aligned; head_dim of the
+assigned archs is 64..384 so a (128, D) tile is <= 192 KiB).
+
+GQA is handled in the index map: query head h reads KV head h // (H // KV) —
+KV is never materialized per-Q-head.  Validated against ref.py in
+interpret mode (tests/test_kernels.py sweeps shapes and dtypes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, window, bq, bk, sk):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (BQ, BK)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < sk
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_tpu(q, k, v, *, causal=True, window=0, bq=DEFAULT_BQ,
+                        bk=DEFAULT_BK, interpret=None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    qt = q.transpose(0, 2, 1, 3)     # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)     # (B, KV, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+    bq_ = min(bq, sq)
+    bk_ = min(bk, sk)
+    pad_q = (-sq) % bq_
+    pad_k = (-sk) % bk_
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = qt.shape[2] // bq_
+    nk = kt.shape[2] // bk_
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq_, bk=bk_, sk=sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, d),
+                         lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bk_, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk_, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nq * bq_, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_,), jnp.float32),       # m
+            pltpu.VMEM((bq_,), jnp.float32),       # l
+            pltpu.VMEM((bq_, d), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :sq]
+    return out.transpose(0, 2, 1, 3)

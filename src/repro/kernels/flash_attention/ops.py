@@ -1,0 +1,30 @@
+"""Dispatching wrapper: Pallas flash attention on TPU, chunked-jnp elsewhere.
+
+The dry-run lowers on the CPU backend (512 host devices), where pallas_call has
+no lowering path — so model code always goes through this wrapper.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, chunk=512):
+    """Training/prefill attention. q:(B,S,H,D) k,v:(B,S,KV,D)."""
+    if _on_tpu():
+        from .kernel import flash_attention_tpu
+        return flash_attention_tpu(q, k, v, causal=causal, window=window)
+    return ref.chunked_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+    """Single-token decode over a KV cache (ring-buffered if window>0)."""
+    return ref.decode_attention(q, k_cache, v_cache, pos, window=window)

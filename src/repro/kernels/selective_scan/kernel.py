@@ -1,0 +1,114 @@
+"""Pallas TPU selective scan (Mamba recurrence), time-chunked.
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * u_t) * B_t ;  y_t = C_t . h_t
+
+Blocking: grid (batch, d_inner/BD, S/CHUNK) with the time-chunk axis
+minor-most (sequential), so the (BD, N) recurrent state stays resident in
+VMEM scratch across chunks.  Within a chunk the recurrence is a fori_loop of
+vector ops over CHUNK steps — the state never round-trips to HBM, which is
+the entire point of the kernel (the jnp reference re-materializes
+(B, chunk, BD, N) tensors per chunk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+DEFAULT_BD = 256
+
+
+def _scan_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
+                 h_ref, *, chunk, s_total):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)            # (BD, N)
+    dvec = d_ref[...].astype(jnp.float32)         # (BD,)
+
+    def step(i, carry):
+        h, ys = carry
+        u_i = u_ref[0, i].astype(jnp.float32)     # (BD,)
+        dt_i = dt_ref[0, i].astype(jnp.float32)   # (BD,)
+        b_i = b_ref[0, i].astype(jnp.float32)     # (N,)
+        c_i = c_ref[0, i].astype(jnp.float32)     # (N,)
+        abar = jnp.exp(dt_i[:, None] * a)         # (BD, N)
+        h = abar * h + (dt_i * u_i)[:, None] * b_i[None, :]
+        y = (h * c_i[None, :]).sum(axis=1) + dvec * u_i
+        return h, ys.at[i].set(y)
+
+    h0 = h_ref[...]
+    h1, ys = jax.lax.fori_loop(
+        0, chunk, step, (h0, jnp.zeros((chunk, h0.shape[0]), jnp.float32)))
+    h_ref[...] = h1
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(ic == pl.num_programs(2) - 1)
+    def _final():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def selective_scan_tpu(u, dt, A, B, C, D, *, chunk=DEFAULT_CHUNK,
+                       bd=DEFAULT_BD, interpret=None, h0=None):
+    """u, dt: (Ba, S, Di); A: (Di, N); B, C: (Ba, S, N); D: (Di,).
+
+    Returns (y (Ba,S,Di), h_last (Ba,Di,N)).  h0 (initial state) is folded in
+    by the caller via the reference path when resuming — the kernel assumes
+    zero initial state (training/prefill from scratch).
+    """
+    if h0 is not None:  # decode-resume path: defer to reference
+        from . import ref
+        return ref.selective_scan(u, dt, A, B, C, D, chunk=chunk, h0=h0)
+    ba, s, di = u.shape
+    n = A.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ch = min(chunk, s)
+    bd_ = min(bd, di)
+    pad_s = (-s) % ch
+    pad_d = (-di) % bd_
+
+    def padsd(x):  # pad time and channel dims
+        return jnp.pad(x, ((0, 0), (0, pad_s), (0, pad_d)))
+
+    up = padsd(u) if (pad_s or pad_d) else u
+    dtp = padsd(dt) if (pad_s or pad_d) else dt
+    bp = jnp.pad(B, ((0, 0), (0, pad_s), (0, 0))) if pad_s else B
+    cp = jnp.pad(C, ((0, 0), (0, pad_s), (0, 0))) if pad_s else C
+    ap = jnp.pad(A, ((0, pad_d), (0, 0))) if pad_d else A
+    dp = jnp.pad(D, (0, pad_d)) if pad_d else D
+    nc = up.shape[1] // ch
+    nd = up.shape[2] // bd_
+
+    kernel = functools.partial(_scan_kernel, chunk=ch, s_total=s)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(ba, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, ch, bd_), lambda b, idd, ic: (b, ic, idd)),
+            pl.BlockSpec((1, ch, bd_), lambda b, idd, ic: (b, ic, idd)),
+            pl.BlockSpec((bd_, n), lambda b, idd, ic: (idd, 0)),
+            pl.BlockSpec((1, ch, n), lambda b, idd, ic: (b, ic, 0)),
+            pl.BlockSpec((1, ch, n), lambda b, idd, ic: (b, ic, 0)),
+            pl.BlockSpec((bd_,), lambda b, idd, ic: (idd,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ch, bd_), lambda b, idd, ic: (b, ic, idd)),
+            pl.BlockSpec((1, bd_, n), lambda b, idd, ic: (b, idd, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(up.shape, u.dtype),
+            jax.ShapeDtypeStruct((ba, up.shape[2], n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd_, n), jnp.float32)],
+        interpret=interpret,
+    )(up, dtp, ap, bp, cp, dp)
+    return y[:, :s, :di], h_last[:, :di]

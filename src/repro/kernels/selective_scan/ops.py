@@ -1,0 +1,16 @@
+"""Dispatching wrapper for the selective scan: Pallas on TPU, jnp elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+
+
+def selective_scan(u, dt, A, B, C, D, *, chunk=128, h0=None):
+    if jax.default_backend() == "tpu":
+        from .kernel import selective_scan_tpu
+        return selective_scan_tpu(u, dt, A, B, C, D, chunk=chunk, h0=h0)
+    return ref.selective_scan(u, dt, A, B, C, D, chunk=chunk, h0=h0)
+
+
+selective_scan_step = ref.selective_scan_step

@@ -1,0 +1,1 @@
+from .ops import sil_mse  # noqa: F401

@@ -1,0 +1,101 @@
+"""Pallas TPU fused SIL-MSE loss (+ activation gradient).
+
+For LM-scale PNN the synthetic target ``SIL[:, y_t]`` per token is a gathered
+column of a (d_model, vocab) table; materializing the gathered (T, d) target
+in HBM costs a full activation tensor.  This kernel uses **scalar-prefetched
+labels to drive the SIL BlockSpec index map**: grid step (it, i, id) DMAs
+exactly the (BD, 1) column SIL[id*BD:(id+1)*BD, labels[it*BT+i]] into VMEM —
+the gathered target never exists in HBM.
+
+Outputs: per-token-block partial loss sums (summed on the host side of the
+call) and the activation gradient, fused in one pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BT = 128
+DEFAULT_BD = 512
+
+
+def _sil_kernel(lab_ref, act_ref, sil_ref, loss_ref, grad_ref, *, bt, bd,
+                t_total, scale):
+    it = pl.program_id(0)
+    i = pl.program_id(1)
+    idd = pl.program_id(2)
+
+    @pl.when((i == 0) & (idd == 0))
+    def _init():
+        loss_ref[0] = jnp.zeros_like(loss_ref[0])
+
+    a = act_ref[0].astype(jnp.float32)            # (BD,)
+    tgt = sil_ref[:, 0].astype(jnp.float32)       # (BD,)
+    row = it * bt + i
+    valid = row < t_total
+    diff = jnp.where(valid, a - tgt, 0.0)
+    loss_ref[0] += jnp.sum(diff * diff)
+    grad_ref[0] = (scale * diff).astype(grad_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bd", "interpret"))
+def sil_mse_fwd_tpu(act, sil, labels, *, bt=DEFAULT_BT, bd=DEFAULT_BD,
+                    interpret=None):
+    """act: (T, d); sil: (d, M); labels: (T,) -> (mean loss, dloss/dact)."""
+    t, d = act.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bt_ = min(bt, t)
+    bd_ = min(bd, d)
+    pad_t = (-t) % bt_
+    pad_d = (-d) % bd_
+    a = jnp.pad(act, ((0, pad_t), (0, pad_d))) if (pad_t or pad_d) else act
+    s = jnp.pad(sil, ((0, pad_d), (0, 0))) if pad_d else sil
+    lab = jnp.pad(labels, (0, pad_t)).astype(jnp.int32) if pad_t \
+        else labels.astype(jnp.int32)
+    nt = a.shape[0] // bt_
+    nd = a.shape[1] // bd_
+    scale = 2.0 / (t * d)
+
+    kernel = functools.partial(_sil_kernel, bt=bt_, bd=bd_, t_total=t,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nt, bt_, nd),
+        in_specs=[
+            # one activation row per step
+            pl.BlockSpec((1, bd_), lambda it, i, idd, lab_ref:
+                         (it * bt_ + i, idd)),
+            # the label-selected SIL column block
+            pl.BlockSpec((bd_, 1), lambda it, i, idd, lab_ref:
+                         (idd, lab_ref[it * bt_ + i])),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda it, i, idd, lab_ref: (it,)),
+            pl.BlockSpec((1, bd_), lambda it, i, idd, lab_ref:
+                         (it * bt_ + i, idd)),
+        ],
+    )
+    partial_loss, grad = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nt,), jnp.float32),
+            jax.ShapeDtypeStruct(a.shape, act.dtype),
+        ],
+        interpret=interpret,
+    )(lab, a, s)
+    loss = partial_loss.sum() / (t * d)
+    return loss, grad[:t, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bd", "interpret"))
+def sil_mse_tpu(act, sil, labels, *, bt=DEFAULT_BT, bd=DEFAULT_BD,
+                interpret=None):
+    loss, _ = sil_mse_fwd_tpu(act, sil, labels, bt=bt, bd=bd,
+                              interpret=interpret)
+    return loss

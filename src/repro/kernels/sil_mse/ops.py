@@ -1,0 +1,35 @@
+"""Fused SIL-MSE loss with custom VJP; Pallas on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+
+@jax.custom_vjp
+def sil_mse(act, sil, labels):
+    return _fwd_impl(act, sil, labels)
+
+
+def _fwd_impl(act, sil, labels):
+    if jax.default_backend() == "tpu":
+        from .kernel import sil_mse_tpu
+        return sil_mse_tpu(act, sil, labels)
+    return ref.sil_mse(act, sil, labels)
+
+
+def _fwd(act, sil, labels):
+    return _fwd_impl(act, sil, labels), (act, sil, labels)
+
+
+def _bwd(res, g):
+    act, sil, labels = res
+    gact = (ref.sil_mse_grad_act(act, sil, labels) * g).astype(act.dtype)
+    # SIL is a frozen random table (not trained) and labels are ints.
+    gsil = jnp.zeros_like(sil)
+    glab = jnp.zeros(labels.shape, dtype=jax.dtypes.float0)
+    return gact, gsil, glab
+
+
+sil_mse.defvjp(_fwd, _bwd)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused SIL-MSE loss (paper Eq. 1 target, MSE loss).
+
+loss = mean_t mean_i ( act[t, i] - SIL[i, y_t] )^2
+
+The fused kernel never materializes the gathered (T, d) synthetic target in
+HBM; this reference does (it is the oracle, not the production path).
+Also provides the analytic gradient wrt the activations so the kernel's
+custom_vjp can be checked.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sil_mse(act, sil, labels):
+    """act: (T, d) boundary activations; sil: (d, M); labels: (T,) int.
+
+    Returns scalar mean-squared error (paper's left-partition loss).
+    """
+    target = sil[:, labels].T.astype(jnp.float32)  # (T, d)
+    diff = act.astype(jnp.float32) - target
+    return jnp.mean(diff * diff)
+
+
+def sil_mse_grad_act(act, sil, labels):
+    """d loss / d act  — (T, d)."""
+    t, d = act.shape
+    target = sil[:, labels].T.astype(jnp.float32)
+    return (2.0 / (t * d)) * (act.astype(jnp.float32) - target)

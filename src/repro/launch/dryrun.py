@@ -1,0 +1,426 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against ShapeDtypeStruct stand-ins, and extract the roofline
+terms (FLOPs, bytes, collective bytes) from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--mode pnn]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+
+Results are cached in the output JSON; finished combinations are skipped
+unless --force is given.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get
+from repro.core import partition
+from repro.launch import specs as S
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.sharding import Policy
+from repro.launch.hlo_analysis import (analytic_flops_per_chip,
+                                        analytic_hbm_bytes_per_chip,
+                                        collective_stats_loop_aware)
+from repro.launch.steps import (build_decode_step, build_pnn_stage_step,
+                                build_prefill_step, build_train_step,
+                                pick_accum, pick_optimizer_name, _shard_x_fn)
+from repro.models import model as M
+from repro.optim import make_optimizer
+
+def analyze(compiled, lowered, cfg, shape, n_chips, *,
+            params_bytes=0, opt_bytes=0, cache_bytes=0, accum=1) -> Dict[str, Any]:
+    """Roofline terms: analytic compute/memory + loop-aware HLO collectives.
+
+    XLA cost_analysis counts while bodies once (verified), so raw HLO numbers
+    are kept under 'hlo_raw' for reference only."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_stats_loop_aware(hlo)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                if hasattr(ma, attr):
+                    mem[attr] = int(getattr(ma, attr))
+    except Exception:
+        pass
+    flops = analytic_flops_per_chip(cfg, shape, n_chips)
+    hbm = analytic_hbm_bytes_per_chip(
+        cfg, shape, n_chips, params_bytes_per_chip=params_bytes,
+        opt_bytes_per_chip=opt_bytes, cache_bytes_per_chip=cache_bytes,
+        accum=accum)
+    out = {
+        "analytic_flops_per_chip": flops,
+        "analytic_hbm_bytes_per_chip": hbm,
+        "collectives": coll,
+        "memory_analysis": mem,
+        "hlo_raw": {"flops": float(ca.get("flops", 0.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", 0.0))},
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": hbm / HBM_BW,
+        "collective_s": coll["total_bytes"] / ICI_BW,
+    }
+    terms = {k: out[k] for k in ("compute_s", "memory_s", "collective_s")}
+    out["dominant"] = max(terms, key=terms.get)
+    return out
+
+
+def arg_bytes_per_chip(tree, shardings, mesh) -> int:
+    """Analytic per-chip bytes of a sharded input tree."""
+    total = 0
+    flat = jax.tree_util.tree_leaves(tree)
+    shards = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+    for leaf, sh in zip(flat, shards):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        den = 1
+        spec = sh.spec
+        for i, ent in enumerate(spec):
+            if ent is None:
+                continue
+            axes = ent if isinstance(ent, tuple) else (ent,)
+            for ax in axes:
+                den *= mesh.shape[ax]
+        total += (n // max(den, 1)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*tokens (train), 2*N_active*tokens (prefill),
+    2*N_active*B (decode, per step)."""
+    n = cfg.param_counts()["active"] - cfg.param_counts()["embed"]
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+# --------------------------------------------------------------------------
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod=False, mode="baseline",
+               seq_shard=False, rec_shard=False, accum_override=None,
+               moe_local=False, mesh_shape=None, verbose=True) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    cfg0 = get(arch)
+    ok, reason = S.applicable(cfg0, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mode": mode, "seq_shard": seq_shard, "rec_shard": rec_shard,
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    cfg = S.arch_for_shape(cfg0, shape)
+    if mode == "pipeline" and not multi_pod:
+        multi_pod = True  # pipeline baseline = stage-per-pod on 2 pods
+        rec["multi_pod"] = True
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    n_chips = mesh.size
+    policy = Policy(cfg, mesh, pipeline=(mode == "pipeline"))
+    if rec_shard:
+        cfg = cfg.replace(
+            recurrent_sharding=policy.batch_entry(shape.global_batch) or None)
+    if seq_shard and shape.seq_len % mesh.shape["model"] == 0:
+        cfg = cfg.replace(
+            context_sharding=policy.batch_entry(shape.global_batch) or None)
+    if moe_local and cfg.moe is not None:
+        dp = 1
+        for ax in policy.batch_entry(shape.global_batch):
+            dp *= mesh.shape[ax]
+        # moe_gather_weights=True was tried and REFUTED (adds weight-gather
+        # traffic without removing the activation psums — EXPERIMENTS §Perf)
+        cfg = cfg.replace(moe_dispatch_groups=dp if dp > 1 else 0)
+    t0 = time.time()
+
+    params_struct = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    p_sh = policy.params_shardings(params_struct)
+
+    with mesh:
+        if shape.kind == "train" and mode in ("baseline", "pipeline"):
+            rec.update(_lower_train(cfg, shape, mesh, policy, params_struct,
+                                    p_sh, seq_shard, accum_override,
+                                    moe_local))
+        elif shape.kind == "train" and mode == "pnn":
+            rec.update(_lower_pnn(cfg, shape, mesh, policy, params_struct,
+                                  p_sh, seq_shard))
+        elif shape.kind == "prefill":
+            rec.update(_lower_prefill(cfg, shape, mesh, policy, params_struct,
+                                      p_sh))
+        else:
+            rec.update(_lower_decode(cfg, shape, mesh, policy, params_struct,
+                                     p_sh))
+
+    rec["n_chips"] = n_chips
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    rec["sharding_decisions"] = policy.explain()
+    mf = model_flops(cfg, shape)
+    rec["model_flops_per_chip"] = mf / n_chips
+    if rec.get("analysis", {}).get("analytic_flops_per_chip"):
+        rec["useful_flops_ratio"] = (mf / n_chips) / \
+            rec["analysis"]["analytic_flops_per_chip"]
+    rec["params_bytes_per_chip"] = arg_bytes_per_chip(params_struct, p_sh, mesh)
+    rec["status"] = "ok"
+    return rec
+
+
+def _lower_train(cfg, shape, mesh, policy, params_struct, p_sh, seq_shard,
+                 accum_override=None, moe_local=False):
+    opt_name = pick_optimizer_name(cfg)
+    opt = make_optimizer(opt_name, 1e-3)
+    accum = accum_override or pick_accum(cfg, shape, policy)
+    ostate_struct = jax.eval_shape(opt.init, params_struct)
+    o_sh = policy.opt_state_shardings(opt_name, params_struct)
+    batch_specs = S.train_batch_specs(cfg, shape)
+    b_sh = policy.batch_shardings(batch_specs)
+    shard_fn = _shard_x_fn(cfg, policy, shape.global_batch, shape.seq_len) \
+        if seq_shard else None
+    gspecs = policy.params_pspecs(params_struct) \
+        if (seq_shard or moe_local) else None
+    step = build_train_step(cfg, opt, accum=accum, seq_shard_fn=shard_fn,
+                            grad_pspecs=gspecs)
+    jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+    lowered = jitted.lower(params_struct, ostate_struct, batch_specs)
+    compiled = lowered.compile()
+    pbytes = arg_bytes_per_chip(params_struct, p_sh, mesh)
+    obytes = arg_bytes_per_chip(ostate_struct, o_sh, mesh)
+    return {"optimizer": opt_name, "accum": accum,
+            "opt_bytes_per_chip": obytes,
+            "analysis": analyze(compiled, lowered, cfg, shape, mesh.size,
+                                params_bytes=pbytes, opt_bytes=obytes,
+                                accum=accum)}
+
+
+def _lower_prefill(cfg, shape, mesh, policy, params_struct, p_sh):
+    batch_specs = S.prefill_batch_specs(cfg, shape)
+    b_sh = policy.batch_shardings(batch_specs)
+    step = build_prefill_step(cfg, shape.seq_len)
+    cache_struct = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    c_sh = policy.cache_shardings(cache_struct, shape.global_batch)
+    jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                     out_shardings=(None, c_sh, None))
+    lowered = jitted.lower(params_struct, batch_specs)
+    compiled = lowered.compile()
+    pbytes = arg_bytes_per_chip(params_struct, p_sh, mesh)
+    cbytes = arg_bytes_per_chip(cache_struct, c_sh, mesh)
+    return {"cache_bytes_per_chip": cbytes,
+            "analysis": analyze(compiled, lowered, cfg, shape, mesh.size,
+                                params_bytes=pbytes, cache_bytes=cbytes)}
+
+
+def _lower_decode(cfg, shape, mesh, policy, params_struct, p_sh):
+    cache_struct, token_struct, pos_struct = S.decode_specs(cfg, shape)
+    c_sh = policy.cache_shardings(cache_struct, shape.global_batch)
+    t_sh = NamedSharding(mesh, policy.batch_pspec(token_struct.shape))
+    pos_sh = NamedSharding(mesh, P())
+    step = build_decode_step(cfg)
+    jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, pos_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(1,))
+    lowered = jitted.lower(params_struct, cache_struct, token_struct,
+                           pos_struct)
+    compiled = lowered.compile()
+    pbytes = arg_bytes_per_chip(params_struct, p_sh, mesh)
+    cbytes = arg_bytes_per_chip(cache_struct, c_sh, mesh)
+    return {"cache_bytes_per_chip": cbytes,
+            "analysis": analyze(compiled, lowered, cfg, shape, mesh.size,
+                                params_bytes=pbytes, cache_bytes=cbytes)}
+
+
+def _lower_pnn(cfg, shape, mesh, policy, params_struct, p_sh,
+               seq_shard=False):
+    """Lower every PNN stage's step; report per-stage memory + collectives.
+
+    This is the paper's claim measured: each stage's step touches only that
+    stage's params/optimizer state, and stages train with zero inter-stage
+    collectives (the pod axis carries nothing during training).
+    """
+    plan = partition.make_plan(cfg, n_stages=2)
+    opt_name = pick_optimizer_name(cfg)
+    stages = []
+    for k in range(plan.n_stages):
+        opt = make_optimizer(opt_name, 1e-3)
+        sp_struct = jax.eval_shape(
+            lambda ps: partition.slice_stage_params(cfg, plan, ps, k),
+            params_struct)
+        sp_sh = policy.params_shardings(sp_struct)
+        so_struct = jax.eval_shape(opt.init, sp_struct)
+        so_sh = policy.opt_state_shardings(opt_name, sp_struct)
+        shard_fn = _shard_x_fn(cfg, policy, shape.global_batch,
+                               shape.seq_len) if seq_shard else None
+        gspecs = policy.params_pspecs(sp_struct) if seq_shard else None
+        step = build_pnn_stage_step(cfg, plan, k, opt, seq_shard_fn=shard_fn,
+                                    grad_pspecs=gspecs)
+        b, s = shape.global_batch, shape.seq_len
+        s_text = s - (cfg.vision_tokens if cfg.frontend == "vision" else 0)
+        labels = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        lab_sh = NamedSharding(mesh, policy.batch_pspec(labels.shape))
+        if k == 0:
+            xin = S.train_batch_specs(cfg, shape)
+            xin.pop("labels")
+            x_sh = policy.batch_shardings(xin)
+        else:
+            xin = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                       cfg.activation_dtype())
+            x_sh = NamedSharding(mesh, policy.batch_pspec(xin.shape))
+            if cfg.enc_dec:
+                enc = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model),
+                                           cfg.activation_dtype())
+                xin = (xin, enc)
+                x_sh = (x_sh, NamedSharding(mesh,
+                                            policy.batch_pspec(enc.shape)))
+        if k < plan.n_stages - 1:
+            sil = jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab_padded),
+                                       jnp.float32)
+            sil_sh = NamedSharding(mesh, P(None, "model"))
+        else:
+            sil = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+            sil_sh = NamedSharding(mesh, P())
+        jitted = jax.jit(step, in_shardings=(sp_sh, so_sh, x_sh, lab_sh,
+                                             sil_sh),
+                         out_shardings=(sp_sh, so_sh, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(sp_struct, so_struct, xin, labels, sil)
+        compiled = lowered.compile()
+        spb = arg_bytes_per_chip(sp_struct, sp_sh, mesh)
+        sob = arg_bytes_per_chip(so_struct, so_sh, mesh)
+        stages.append({
+            "stage": k,
+            "analysis": analyze(compiled, lowered, cfg, shape, mesh.size,
+                                params_bytes=spb, opt_bytes=sob),
+            "stage_params_bytes_per_chip": spb,
+            "stage_opt_bytes_per_chip": sob,
+        })
+    return {"optimizer": opt_name, "pnn_stages": stages,
+            "n_stages": plan.n_stages}
+
+
+# --------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=ARCH_NAMES + ["all"])
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + ["all"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="baseline",
+                    choices=["baseline", "pnn", "pipeline"])
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel residual sharding (perf variant)")
+    ap.add_argument("--rec-shard", action="store_true",
+                    help="pin recurrent scan carries to batch sharding "
+                         "(perf variant)")
+    ap.add_argument("--accum", type=int, default=None,
+                    help="override microbatch count (perf variant)")
+    ap.add_argument("--moe-local", action="store_true",
+                    help="locality-grouped MoE dispatch (perf variant)")
+    ap.add_argument("--mesh", default=None,
+                    help="pod mesh shape override, e.g. 32x8 (perf variant)")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_NAMES if (args.all or args.arch in (None, "all")) \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape in (None, "all")) \
+        else [args.shape]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            variant = "plain"
+            if args.seq_shard and args.rec_shard:
+                variant = "seqshard+recshard"
+            elif args.seq_shard:
+                variant = "seqshard"
+            elif args.rec_shard:
+                variant = "recshard"
+            if args.moe_local:
+                variant += "+moelocal"
+            if args.mesh:
+                variant += f"+mesh{args.mesh}"
+            if args.accum:
+                variant += f"+accum{args.accum}"
+            is_multi = args.multi_pod or args.mode == "pipeline"
+            key = f"{arch}|{shape}|{'multi' if is_multi else 'single'}" \
+                f"|{args.mode}|{variant}"
+            if key in results and results[key].get("status") in ("ok", "skipped") \
+                    and not args.force:
+                print(f"[cached] {key}")
+                continue
+            print(f"[dryrun] {key} ...", flush=True)
+            try:
+                rec = dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                                 mode=args.mode, seq_shard=args.seq_shard,
+                                 rec_shard=args.rec_shard,
+                                 accum_override=args.accum,
+                                 moe_local=args.moe_local,
+                                 mesh_shape=tuple(int(x) for x in
+                                                  args.mesh.split("x"))
+                                 if args.mesh else None)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"  ERROR: {e}")
+            results[key] = rec
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+            if rec.get("status") == "ok":
+                if "analysis" in rec:
+                    a = rec["analysis"]
+                    print(f"  ok in {rec['elapsed_s']}s: "
+                          f"compute={a['compute_s']*1e3:.2f}ms "
+                          f"memory={a['memory_s']*1e3:.2f}ms "
+                          f"collective={a['collective_s']*1e3:.2f}ms "
+                          f"dominant={a['dominant']}")
+                else:
+                    for st in rec.get("pnn_stages", []):
+                        a = st["analysis"]
+                        print(f"  stage{st['stage']}: "
+                              f"params/chip={st['stage_params_bytes_per_chip']/2**20:.0f}MiB "
+                              f"coll={a['collective_s']*1e3:.2f}ms")
+            elif rec.get("status") == "skipped":
+                print(f"  skipped: {rec['reason']}")
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_err = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"done: {n_ok} ok, {n_err} errors, "
+          f"{sum(1 for r in results.values() if r.get('status') == 'skipped')} skipped")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Production meshes (TPU v5e target).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips ("data", "model").
+Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model").
+
+Under PNN (the paper's scheme) the "pod" axis carries *stages*, not replicas:
+each pod trains one model partition with zero inter-pod collectives during
+training (DESIGN.md §2.2); under the conventional baseline the pod axis is an
+outer data-parallel axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """shape: optional (data, model) override, e.g. (32, 8) for an
+    expert-parallel variant (model axis dividing the expert count)."""
+    if shape is None:
+        shape = (16, 16)
+    assert shape[0] * shape[1] == 256, "one pod = 256 chips"
+    full = ((2,) + tuple(shape)) if multi_pod else tuple(shape)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(full, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axis names for this mesh (batch sharding)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fsdp_axis(mesh) -> str:
+    return "data"
+
+
+def tp_axis(mesh) -> str:
+    return "model"
+
+
+# TPU v5e hardware constants (per chip) for the roofline model
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link

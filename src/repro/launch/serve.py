@@ -1,0 +1,77 @@
+"""Production serving launcher: batched prefill + decode loop.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --batch 4 --prompt-len 64 --new-tokens 32 [--window 256]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get
+from repro.data.lm import synthetic_token_stream
+from repro.launch.steps import build_decode_step, build_prefill_step
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get(args.arch, smoke=args.smoke)
+    if args.window:
+        cfg = cfg.replace(sliding_window=args.window)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    stream = synthetic_token_stream(args.batch * args.prompt_len + 1,
+                                    cfg.vocab_size, seed=0)
+    batch = {"tokens": jnp.asarray(
+        stream[: args.batch * args.prompt_len].reshape(args.batch, -1))}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model))
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = jnp.zeros(
+            (args.batch, cfg.vision_tokens, cfg.d_model))
+    lc = args.prompt_len + args.new_tokens \
+        + (cfg.vision_tokens if cfg.frontend == "vision" else 0)
+    prefill = jax.jit(build_prefill_step(cfg, cache_len=lc))
+    decode = jax.jit(build_decode_step(cfg))
+
+    logits, cache, pos = prefill(params, batch)
+    key = jax.random.PRNGKey(0)
+
+    def sample(lg, k):
+        lg = lg[:, : cfg.vocab_size]
+        if args.temperature <= 0:
+            return jnp.argmax(lg, -1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / args.temperature, -1) \
+            .astype(jnp.int32)
+
+    tok = sample(logits, key)
+    t0 = time.perf_counter()
+    outs = [tok]
+    for i in range(args.new_tokens - 1):
+        key, sk = jax.random.split(key)
+        logits, cache = decode(params, cache, tok, pos + i)
+        tok = sample(logits, sk)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    n = args.batch * (args.new_tokens - 1)
+    print(f"decoded {n} tokens in {dt*1e3:.0f}ms -> {n/dt:.0f} tok/s "
+          f"(batch={args.batch}, window={cfg.sliding_window or 'full'})")
+    print("sample:", jnp.stack(outs, 1)[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

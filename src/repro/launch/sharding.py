@@ -1,0 +1,301 @@
+"""FSDP+TP sharding policy with divisibility fallback.
+
+Every rule checks divisibility against the actual mesh axis size and falls
+back to replication on that axis when a dimension doesn't divide (e.g.
+qwen2's 12 Q heads on a 16-way model axis).  The decisions are queryable
+(``explain()``) and recorded by the dry-run.
+
+Weight layout conventions (see models/layers.py):
+  attention  wq (d, H*hd)   / wk, wv (d, KV*hd) / wo (H*hd, d)
+  mlp        wg,wu (d, ff)  / wd (ff, d)
+  moe        experts (E, d, ff) etc., router (d, E)
+  stacked over groups: leading G dim (never sharded).
+
+Sharding a fused (H*hd) dim over the model axis is only legal when H divides
+the axis size (so shards hold whole heads and the (B,S,H,hd) reshape stays
+representable); same for KV heads.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+class Policy:
+    """Sharding policy for one (cfg, mesh) pair.
+
+    pipeline=True (multi-pod meshes): the conventional model-parallel
+    baseline the paper argues against — the layer-group stack is sharded
+    over the "pod" axis (stage-per-pod), so every microbatch's residual
+    crosses pods forward AND backward (GSPMD inserts the transfers).  PNN
+    eliminates exactly this traffic; the dry-run quantifies both.
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh, *, fsdp: bool = True,
+                 pipeline: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.tp = "model"
+        self.tp_size = mesh.shape["model"]
+        self.fsdp_ax = "data" if fsdp else None
+        self.fsdp_size = mesh.shape["data"] if fsdp else 1
+        self.pipeline = pipeline and "pod" in mesh.axis_names
+        if self.pipeline:
+            self.dp = ("data",)   # pod axis carries stages, not batch
+        else:
+            self.dp = ("pod", "data") if "pod" in mesh.axis_names \
+                else ("data",)
+        self.decisions: Dict[str, str] = {}
+
+    def _stage_axis(self, n_stacked: int) -> Optional[str]:
+        """Pipeline stage axis for the stacked layer-group dim."""
+        if not self.pipeline:
+            return None
+        pod = self.mesh.shape["pod"]
+        ok = n_stacked % pod == 0
+        self.decisions.setdefault(
+            "pipeline_groups",
+            f"pod({n_stacked})" if ok else f"replicated({n_stacked})")
+        return "pod" if ok else None
+
+    # -- helpers -----------------------------------------------------------
+    def _tp(self, dim: int, why: str) -> Optional[str]:
+        ok = dim % self.tp_size == 0
+        self.decisions.setdefault(
+            why, f"model({dim})" if ok else f"replicated({dim})")
+        return self.tp if ok else None
+
+    def _fs(self, dim: int) -> Optional[str]:
+        if not self.fsdp:
+            return None
+        return self.fsdp_ax if dim % self.fsdp_size == 0 else None
+
+    # -- parameter specs ----------------------------------------------------
+    def param_spec(self, path: str, shape) -> P:
+        cfg = self.cfg
+        h, kv = cfg.n_heads, cfg.n_kv_heads
+        stacked = path.startswith("groups") or path.startswith("encoder")
+        lead: Tuple = ()
+        if stacked:
+            from repro.models import model as _M
+            lead = (self._stage_axis(_M.n_groups(cfg))
+                    if path.startswith("groups") else None,)
+        is_bias = path.endswith("/b")
+
+        def spec(*axes):
+            return P(*(lead + axes))
+
+        if "attn/wq" in path or "cross/wq" in path:
+            ax = self._tp(h, "attn_q_heads")
+            if is_bias:
+                return spec(ax)
+            return spec(self._fs(shape[-2]), ax)
+        if any(s in path for s in ("attn/wk", "attn/wv", "cross/wk", "cross/wv")):
+            ax = self._tp(kv, "attn_kv_heads")
+            if is_bias:
+                return spec(ax)
+            return spec(self._fs(shape[-2]), ax)
+        if "attn/wo" in path or "cross/wo" in path:
+            if is_bias:
+                return spec(None)
+            return spec(self._tp(h, "attn_q_heads"), self._fs(shape[-1]))
+        if any(s in path for s in ("mlp/wg", "mlp/wu", "mlp/w1")):
+            ax = self._tp(cfg.d_ff, "mlp_ff")
+            if is_bias:
+                return spec(ax)
+            return spec(self._fs(shape[-2]), ax)
+        if "mlp/wd" in path or "mlp/w2" in path:
+            if is_bias:
+                return spec(None)
+            return spec(self._tp(cfg.d_ff, "mlp_ff"), self._fs(shape[-1]))
+        if "moe/router" in path:
+            return spec(self._fs(shape[-2]), None)
+        if "moe/" in path:  # expert stacks (E, d, ff) or (E, ff, d)
+            e = cfg.moe.num_experts
+            if e % self.tp_size == 0:
+                self.decisions.setdefault("moe_experts",
+                                          f"model({e})=expert-parallel")
+                return spec(self.tp, self._fs(shape[-2]), None)
+            if path.split("/")[-1] in ("wd", "w2"):   # (E, ff, d)
+                return spec(None, self._tp(cfg.d_ff, "moe_ff"),
+                            self._fs(shape[-1]))
+            return spec(None, self._fs(shape[-2]),
+                        self._tp(cfg.d_ff, "moe_ff"))
+        if "mamba/" in path:
+            return self._mamba_spec(path, shape, spec, is_bias)
+        if "mlstm/" in path or "slstm/" in path:
+            return self._xlstm_spec(path, shape, spec, is_bias)
+        if path == "tok_embed":
+            return P(self._tp(cfg.vocab_padded, "vocab"),
+                     self._fs(cfg.d_model))
+        if path == "unembed":
+            return P(self._fs(cfg.d_model),
+                     self._tp(cfg.vocab_padded, "vocab"))
+        if path.startswith("img_proj") and len(shape) == 2:
+            return P(self._fs(shape[-2]), None)
+        # dec_pos, norms, scalars, 1D leftovers: replicate
+        return P(*(None,) * len(shape))
+
+    def _mamba_spec(self, path, shape, spec, is_bias):
+        tp = lambda d: self._tp(d, "mamba_inner")  # noqa: E731
+        if "in_proj" in path:
+            if is_bias:
+                return spec(tp(shape[-1]))
+            return spec(self._fs(shape[-2]), tp(shape[-1]))
+        if "conv_w" in path:
+            return spec(None, tp(shape[-1]))
+        if "conv_b" in path or path.endswith("/D"):
+            return spec(tp(shape[-1]))
+        if "x_proj" in path:
+            if is_bias:
+                return spec(None)
+            return spec(tp(shape[-2]), None)
+        if "dt_proj" in path:
+            if is_bias:
+                return spec(tp(shape[-1]))
+            return spec(None, tp(shape[-1]))
+        if "A_log" in path:
+            return spec(tp(shape[-2]), None)
+        if "out_proj" in path:
+            if is_bias:
+                return spec(None)
+            return spec(tp(shape[-2]), self._fs(shape[-1]))
+        return P(*(None,) * len(shape))
+
+    def _xlstm_spec(self, path, shape, spec, is_bias):
+        tp = lambda d: self._tp(d, "mlstm_up")  # noqa: E731
+        if "mlstm/up" in path:
+            if is_bias:
+                return spec(tp(shape[-1]))
+            return spec(self._fs(shape[-2]), tp(shape[-1]))
+        if any(s in path for s in ("mlstm/wq", "mlstm/wk", "mlstm/wv")):
+            if is_bias:
+                return spec(None)
+            return spec(tp(shape[-2]), None)
+        if "mlstm/down" in path:
+            if is_bias:
+                return spec(None)
+            return spec(tp(shape[-2]), self._fs(shape[-1]))
+        # gate projections, slstm weights: data-shard the first matmul dim
+        if not is_bias and len(shape) >= 2 and "slstm/r" not in path:
+            return P(*([None] * (len(shape) - 2)
+                       + [self._fs(shape[-2]), None]))
+        return P(*(None,) * len(shape))
+
+    # -- whole-tree specs ---------------------------------------------------
+    def params_pspecs(self, params) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        specs = []
+        for path, leaf in flat:
+            pstr = "/".join(_key(p) for p in path)
+            sp = self.param_spec(pstr, leaf.shape)
+            assert len(sp) <= len(leaf.shape), (pstr, leaf.shape, sp)
+            specs.append(sp)
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def params_shardings(self, params):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self.params_pspecs(params))
+
+    def opt_state_pspecs(self, opt_name: str, params):
+        pspecs = self.params_pspecs(params)
+        scalar = P()
+        if opt_name == "sgdm":
+            return {"mu": pspecs, "count": scalar}
+        if opt_name == "adamw":
+            return {"m": pspecs, "v": pspecs, "count": scalar}
+        if opt_name == "adafactor":
+            def fspec(p, s):
+                sp = _pad_spec(s, p.ndim)
+                if p.ndim >= 2 and p.shape[-1] >= 32 and p.shape[-2] >= 32:
+                    return {"vr": P(*sp[:-1]), "vc": P(*(sp[:-2] + sp[-1:]))}
+                return {"v": P(*sp)}
+            v = jax.tree_util.tree_map(fspec, params, pspecs)
+            return {"v": v, "count": scalar}
+        raise ValueError(opt_name)
+
+    def opt_state_shardings(self, opt_name, params):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s),
+            self.opt_state_pspecs(opt_name, params),
+            is_leaf=lambda x: isinstance(x, P))
+
+    # -- activations / batch / cache ----------------------------------------
+    def batch_entry(self, batch_size: int):
+        """Mesh axes to shard the batch dim over (tuple, possibly empty)."""
+        axes = []
+        rem = batch_size
+        for ax in self.dp:
+            sz = self.mesh.shape[ax]
+            if rem % sz == 0:
+                axes.append(ax)
+                rem //= sz
+        return tuple(axes)
+
+    def batch_pspec(self, array_shape, batch_size=None) -> P:
+        b = batch_size if batch_size is not None else array_shape[0]
+        ent = self.batch_entry(b)
+        first = ent if len(ent) > 1 else (ent[0] if ent else None)
+        return P(*((first,) + (None,) * (len(array_shape) - 1)))
+
+    def batch_shardings(self, batch_specs: Dict[str, Any]):
+        return {k: NamedSharding(self.mesh, self.batch_pspec(v.shape))
+                for k, v in batch_specs.items()}
+
+    def cache_pspecs(self, cache, batch_size: int):
+        ent = self.batch_entry(batch_size)
+        bent = ent if len(ent) > 1 else (ent[0] if ent else None)
+        batch_sharded = bool(ent)
+        cfg = self.cfg
+
+        def leaf(path, x):
+            pstr = "/".join(_key(p) for p in path)
+            last = pstr.split("/")[-1]
+            rest = [None] * (x.ndim - 2)
+            if last in ("k", "v", "cross_k", "cross_v"):
+                # (G, B, L, KV, hd): prefer KV-head sharding; fall back to
+                # head_dim sharding (always combinable with batch sharding —
+                # decode attention contracts hd, giving a small psum, vs. a
+                # replicated multi-GiB cache; EXPERIMENTS.md §Perf fit fixes)
+                if cfg.n_kv_heads % self.tp_size == 0:
+                    rest = [None, self.tp, None]
+                elif cfg.hd % self.tp_size == 0:
+                    rest = [None, None, self.tp]
+            elif last == "ssm":           # (G, B, Di, N)
+                rest = [self.tp if x.shape[-2] % self.tp_size == 0 else None,
+                        None]
+            elif last == "conv":          # (G, B, K-1, Di)
+                rest = [None,
+                        self.tp if x.shape[-1] % self.tp_size == 0 else None]
+            return P(*([None, bent] + rest))
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        return jax.tree_util.tree_unflatten(
+            treedef, [leaf(p, x) for p, x in flat])
+
+    def cache_shardings(self, cache, batch_size: int):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s),
+            self.cache_pspecs(cache, batch_size),
+            is_leaf=lambda x: isinstance(x, P))
+
+    def explain(self) -> Dict[str, str]:
+        return dict(self.decisions)
+
+
+def _key(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _pad_spec(s: P, ndim: int):
+    t = tuple(s)
+    return t + (None,) * (ndim - len(t))

@@ -1,0 +1,107 @@
+"""Production training launcher.
+
+On a real TPU slice this runs the sharded train step over the production
+mesh; on CPU (this container) it falls back to single-device execution with
+the same code path (reduced configs via --smoke).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 20 --batch 8 --seq 128 [--mode pnn --stages 2] [--seq-shard]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCH_NAMES, get
+from repro.core import partition, pnn
+from repro.data.lm import lm_batches, synthetic_token_stream
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import Policy
+from repro.launch.steps import (build_train_step, pick_accum,
+                                pick_optimizer_name, _shard_x_fn)
+from repro.configs.base import InputShape
+from repro.models import model as M
+from repro.optim import cosine_warmup, make_optimizer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=ARCH_NAMES)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mode", default="baseline", choices=["baseline", "pnn"])
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get(args.arch, smoke=args.smoke)
+    n_dev = len(jax.devices())
+    use_mesh = n_dev >= 256
+    print(f"arch={cfg.name} devices={n_dev} "
+          f"mesh={'production 16x16' if use_mesh else 'single-device'}")
+
+    stream = synthetic_token_stream(1_000_000, cfg.vocab_size, seed=0)
+    it = lm_batches(stream, args.batch, args.seq, seed=0)
+
+    def next_batch(_):
+        return {k: jnp.asarray(v) for k, v in next(it).items()}
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    if args.mode == "pnn":
+        plan = partition.make_plan(cfg, args.stages)
+        pc = pnn.PNNLMConfig(
+            n_stages=args.stages, kappa=1.0,
+            stages=[pnn.PNNStageHP(steps=args.steps // args.stages,
+                                   lr=args.lr)] * args.stages,
+            recovery_steps=args.steps // 4, recovery_lr=args.lr / 10)
+        params, hist = pnn.pnn_train_lm(cfg, plan, params, next_batch, pc,
+                                        jax.random.PRNGKey(1))
+        print("PNN losses (tail):", [round(l, 3) for l in hist["loss"][-5:]])
+    else:
+        opt_name = pick_optimizer_name(cfg) if not args.smoke else "adamw"
+        opt = make_optimizer(opt_name, cosine_warmup(args.lr, 10, args.steps))
+        state = opt.init(params)
+        shape = InputShape("cli", args.seq, args.batch, "train")
+        if use_mesh:
+            mesh = make_production_mesh()
+            policy = Policy(cfg, mesh)
+            accum = pick_accum(cfg, shape, policy)
+            shard_fn = _shard_x_fn(cfg, policy, args.batch, args.seq) \
+                if args.seq_shard else None
+            step = build_train_step(cfg, opt, accum=accum,
+                                    seq_shard_fn=shard_fn)
+            p_sh = policy.params_shardings(params)
+            o_sh = policy.opt_state_shardings(opt_name, params)
+            step_fn = jax.jit(step, in_shardings=(p_sh, o_sh, None),
+                              out_shardings=(p_sh, o_sh, None),
+                              donate_argnums=(0, 1))
+            params = jax.device_put(params, p_sh)
+            state = jax.device_put(state, o_sh)
+        else:
+            step_fn = jax.jit(build_train_step(cfg, opt, accum=1))
+        t0 = time.time()
+        for i in range(args.steps):
+            params, state, metrics = step_fn(params, state, next_batch(i))
+            if (i + 1) % max(args.steps // 5, 1) == 0 or i == 0:
+                print(f"step {i+1:4d} ce={float(metrics['ce']):.3f} "
+                      f"grad_norm={float(metrics['grad_norm']):.2f} "
+                      f"({(i+1)*args.batch*args.seq/(time.time()-t0):.0f} tok/s)")
+
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, args.steps, {"params": params})
+        print("saved:", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import layers, model, mlp  # noqa: F401

@@ -1,0 +1,71 @@
+"""The paper's fully-connected classification network (§3).
+
+Base network: 784 -> 80 -> 60 -> 60 -> 60 -> 47, ReLU activations except the
+final (identity) layer.  Exposes layer-granular forward so core/pnn.py can cut
+it at any boundary (the paper cuts after the 2nd hidden layer: left =
+[784->80->60], right = [60->60->60->47]).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    name: str = "paper_mlp"
+    sizes: Tuple[int, ...] = (784, 80, 60, 60, 60, 47)  # paper §3
+    cut: int = 2          # partition boundary: after hidden layer `cut`
+    n_classes: int = 47
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.sizes) - 1
+
+    @property
+    def boundary_width(self) -> int:
+        return self.sizes[self.cut]
+
+
+def init_params(cfg: MLPConfig, key) -> List[dict]:
+    """PyTorch-default-style init (U(-1/sqrt(fan_in), 1/sqrt(fan_in)))."""
+    params = []
+    keys = jax.random.split(key, cfg.n_layers)
+    for i, k in enumerate(keys):
+        fan_in = cfg.sizes[i]
+        bound = 1.0 / math.sqrt(fan_in)
+        kw, kb = jax.random.split(k)
+        params.append({
+            "w": jax.random.uniform(kw, (fan_in, cfg.sizes[i + 1]),
+                                    jnp.float32, -bound, bound),
+            "b": jax.random.uniform(kb, (cfg.sizes[i + 1],),
+                                    jnp.float32, -bound, bound),
+        })
+    return params
+
+
+def forward_range(cfg: MLPConfig, params: Sequence[dict], x, lo: int, hi: int,
+                  *, final_identity: bool = True):
+    """Apply layers [lo, hi). ReLU after every layer except the network's last
+    (identity, per the paper)."""
+    for i in range(lo, hi):
+        x = x @ params[i - lo]["w"] + params[i - lo]["b"]
+        if i < cfg.n_layers - 1 or not final_identity:
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward(cfg: MLPConfig, params, x):
+    return forward_range(cfg, params, x, 0, cfg.n_layers)
+
+
+def macs(cfg: MLPConfig, lo: int = 0, hi: int = None) -> int:
+    """Multiply-accumulate ops per sample for layers [lo, hi) — paper's cost
+    unit (matches their ptflops accounting: weights + biases)."""
+    hi = cfg.n_layers if hi is None else hi
+    return sum(cfg.sizes[i] * cfg.sizes[i + 1] + cfg.sizes[i + 1]
+               for i in range(lo, hi))

@@ -1,0 +1,3 @@
+from .optimizers import (  # noqa: F401
+    Optimizer, sgd_momentum, adamw, adafactor, make_optimizer)
+from .schedules import constant, cosine_warmup  # noqa: F401

@@ -1,0 +1,139 @@
+"""Optimizers in pure JAX (no optax in this container).
+
+API: ``opt.init(params) -> state``; ``opt.update(grads, state, params) ->
+(new_params, new_state)``.  Learning-rate schedules are functions of
+``state['count']``.
+
+The paper trains with SGD + momentum (lr=0.01, momentum=0.9); the large
+assigned architectures default to Adafactor (factored second moments — the
+memory-efficient optimizer family the paper cites as [23, 24]).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+    name: str
+
+
+def _tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def sgd_momentum(lr=0.01, momentum=0.9, weight_decay=0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mu": _tree_map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step_lr = lr_fn(state["count"])
+        if weight_decay:
+            grads = _tree_map(lambda g, p: g + weight_decay * p, grads, params)
+        mu = _tree_map(lambda m, g: momentum * m + g, state["mu"], grads)
+        new_params = _tree_map(
+            lambda p, m: (p - step_lr * m).astype(p.dtype), params, mu)
+        return new_params, {"mu": mu, "count": state["count"] + 1}
+
+    return Optimizer(init, update, "sgdm")
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": _tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "v": _tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        step_lr = lr_fn(state["count"])
+        m = _tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                      state["m"], grads)
+        v = _tree_map(lambda v_, g: b2 * v_ + (1 - b2)
+                      * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_lr * step).astype(p.dtype)
+
+        return _tree_map(upd, params, m, v), {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              min_dim_size_to_factor=32) -> Optimizer:
+    """Shazeer & Stern Adafactor (factored 2nd moments, no momentum).
+
+    >=2D params whose trailing two dims are both >= min_dim_size_to_factor get
+    factored (row, col) accumulators — O(n+m) instead of O(n*m) state.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor \
+            and p.shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def st(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"v": _tree_map(st, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        step_lr = lr_fn(state["count"])
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+
+        def upd(p, g, v):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr / jnp.maximum(vr.mean(-1, keepdims=True), eps))[..., None] \
+                    * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = gf * jax.lax.rsqrt(jnp.maximum(nv["v"], eps))
+            # update clipping by RMS
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(
+                p.astype(jnp.float32)))), 1e-3)
+            return (p.astype(jnp.float32) - step_lr * scale * u).astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        return new_params, {"v": new_v, "count": c}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    return {"sgdm": sgd_momentum, "adamw": adamw,
+            "adafactor": adafactor}[name](lr=lr, **kw)

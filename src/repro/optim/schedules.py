@@ -1,0 +1,19 @@
+"""Learning-rate schedules (functions of step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = peak_lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,42 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 host devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs import get  # noqa: E402
+from repro.models import model as M  # noqa: E402
+
+
+def make_batch(cfg, b=2, s=16, key=0):
+    """A well-formed training batch for any assigned architecture family."""
+    rng = jax.random.PRNGKey(key)
+    ks = jax.random.split(rng, 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(
+            ks[2], (b, cfg.enc_seq, cfg.d_model), jnp.float32) * 0.02
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = jax.random.normal(
+            ks[3], (b, cfg.vision_tokens, cfg.d_model), jnp.float32) * 0.02
+    return batch
+
+
+@pytest.fixture(scope="session")
+def smoke_params_cache():
+    cache = {}
+
+    def get_params(name):
+        if name not in cache:
+            cfg = get(name, smoke=True)
+            cache[name] = (cfg, M.init_params(cfg, jax.random.PRNGKey(0)))
+        return cache[name]
+    return get_params

@@ -1,0 +1,145 @@
+"""Serving-path integration: prefill + decode_step must agree with the full
+(training) forward at the next-token position, for every cache family
+(KV attention, sliding-window ring, mamba conv/ssm state, xLSTM states,
+whisper cross-attention, VLM image prefix)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import ARCH_NAMES, get
+from repro.models import model as M
+
+DECODE_ARCHS = [n for n in ARCH_NAMES]
+
+
+@pytest.mark.parametrize("name", DECODE_ARCHS)
+def test_prefill_decode_matches_full(name, smoke_params_cache):
+    cfg, params = smoke_params_cache(name)
+    if cfg.moe is not None:
+        # exact equivalence needs no capacity drops: token-choice routing is
+        # batch-dependent by design (GShard capacity), so give it headroom
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=16.0))
+    # fp32 activations: this test checks cache/state logic, not bf16 noise
+    # (smoke params are float32 already)
+    cfg = cfg.replace(dtype="float32")
+    b, s = 2, 24
+    batch = make_batch(cfg, b=b, s=s + 1, key=7)
+    full_logits, _ = M.forward(cfg, params, batch, remat=False)
+
+    pre = {k: (v[:, :s] if k in ("tokens", "labels") else v)
+           for k, v in batch.items()}
+    pre.pop("labels")
+    # the KV cache must cover the vision prefix too
+    lc = s + 8 + (cfg.vision_tokens if cfg.frontend == "vision" else 0)
+    logits0, cache, pos = M.prefill(cfg, params, pre, cache_len=lc)
+    # prefill last-token logits == full forward at position s-1 (text)
+    off = cfg.vision_tokens if cfg.frontend == "vision" else 0
+    np.testing.assert_allclose(
+        np.asarray(logits0, np.float32),
+        np.asarray(full_logits[:, off + s - 1], np.float32),
+        rtol=3e-2, atol=3e-2)
+
+    # decode the (s+1)-th token; compare with full forward's last position
+    tok = batch["tokens"][:, s]
+    logits1, _ = M.decode_step(cfg, params, cache, tok, pos)
+    np.testing.assert_allclose(
+        np.asarray(logits1, np.float32),
+        np.asarray(full_logits[:, off + s], np.float32),
+        rtol=3e-2, atol=3e-2)
+
+
+def test_sliding_window_ring_decode():
+    """Windowed variant: decode with a ring cache matches the windowed full
+    forward."""
+    cfg = get("qwen2-1.5b", smoke=True).replace(sliding_window=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 1, 20
+    batch = make_batch(cfg, b=b, s=s + 1, key=3)
+    full_logits, _ = M.forward(cfg, params, batch, remat=False)
+    pre = {"tokens": batch["tokens"][:, :s]}
+    _, cache, pos = M.prefill(cfg, params, pre, cache_len=s)
+    # ring cache is window-sized
+    assert cache["slot_0"]["k"].shape[2] == 8
+    tok = batch["tokens"][:, s]
+    logits1, _ = M.decode_step(cfg, params, cache, tok, pos)
+    np.testing.assert_allclose(
+        np.asarray(logits1, np.float32),
+        np.asarray(full_logits[:, s], np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_multi_step_decode_consistency():
+    """Greedy decode 4 steps == teacher-forced full forwards."""
+    cfg = get("xlstm-125m", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, s, extra = 1, 12, 4
+    batch = make_batch(cfg, b=b, s=s + extra, key=5)
+    toks = batch["tokens"]
+    _, cache, pos = M.prefill(cfg, params, {"tokens": toks[:, :s]},
+                              cache_len=s + extra)
+    for i in range(extra):
+        full_logits, _ = M.forward(cfg, params,
+                                   {"tokens": toks[:, : s + i + 1]},
+                                   remat=False)
+        step_logits, cache = M.decode_step(cfg, params, cache, toks[:, s + i],
+                                           pos + i)
+        np.testing.assert_allclose(
+            np.asarray(step_logits, np.float32),
+            np.asarray(full_logits[:, s + i], np.float32),
+            rtol=3e-2, atol=3e-2)
+
+
+def test_ragged_batch_decode_per_request_positions():
+    """Per-request position vectors: a batch of requests at DIFFERENT
+    positions must decode identically to each request alone (continuous-
+    batching prerequisite)."""
+    cfg = get("qwen2-1.5b", smoke=True).replace(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    lens = [10, 16]
+    batch = make_batch(cfg, b=2, s=20, key=11)
+    toks = batch["tokens"]
+    lc = 24
+
+    # per-request singleton prefills at different lengths
+    caches, logits_solo = [], []
+    for i, ln in enumerate(lens):
+        lg, c, pos = M.prefill(cfg, params,
+                               {"tokens": toks[i:i+1, :ln]}, cache_len=lc)
+        l1, c1 = M.decode_step(cfg, params, c, toks[i:i+1, ln],
+                               jnp.int32(ln))
+        caches.append(c1)
+        logits_solo.append(l1)
+
+    # batched: concat pre-decode caches along batch dim, decode with pos VECTOR
+    caches0 = []
+    for i, ln in enumerate(lens):
+        _, c, _ = M.prefill(cfg, params, {"tokens": toks[i:i+1, :ln]},
+                            cache_len=lc)
+        caches0.append(c)
+    cache0 = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=1), *caches0)
+    tok_vec = jnp.stack([toks[0, lens[0]], toks[1, lens[1]]])
+    pos_vec = jnp.asarray(lens, jnp.int32)
+    logits_batched, _ = M.decode_step(cfg, params, cache0, tok_vec, pos_vec)
+
+    for i in range(2):
+        np.testing.assert_allclose(
+            np.asarray(logits_batched[i], np.float32),
+            np.asarray(logits_solo[i][0], np.float32), rtol=2e-4, atol=2e-4)
+
+
+def test_scalar_pos_still_exact():
+    """The scalar-pos path is unchanged by the ragged-batch support."""
+    cfg = get("xlstm-125m", smoke=True).replace(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, b=2, s=13, key=2)
+    full, _ = M.forward(cfg, params, batch, remat=False)
+    _, cache, pos = M.prefill(cfg, params, {"tokens": batch["tokens"][:, :12]},
+                              cache_len=16)
+    l1, _ = M.decode_step(cfg, params, cache, batch["tokens"][:, 12], pos)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(full[:, 12], np.float32),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,77 @@
+"""MoE dispatch unit tests: capacity semantics, grouped-dispatch
+equivalence, aux-loss sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+
+
+class _Cfg:
+    d_model, d_ff, mlp_type = 64, 128, "swiglu"
+    moe = MoEConfig(num_experts=4, top_k=2)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    key = jax.random.PRNGKey(0)
+    p = L.moe_init(key, _Cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 64))
+    return p, x
+
+
+def test_grouped_equals_global_with_ample_capacity(moe_setup):
+    """Routing is per-token deterministic; with no capacity drops the
+    grouped dispatch must be numerically identical to the global one."""
+    p, x = moe_setup
+    o1, a1 = L.moe_apply(p, x, _Cfg.moe, capacity=128, groups=1)
+    o2, a2 = L.moe_apply(p, x, _Cfg.moe, capacity=64, groups=4)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5,
+                               atol=1e-5)
+    assert abs(float(a1["z_loss"]) - float(a2["z_loss"])) < 1e-4
+
+
+def test_capacity_drops_tokens(moe_setup):
+    """Tiny capacity must drop tokens (output partially zeroed), not crash."""
+    p, x = moe_setup
+    o_small, _ = L.moe_apply(p, x, _Cfg.moe, capacity=8)
+    o_big, _ = L.moe_apply(p, x, _Cfg.moe, capacity=256)
+    # some tokens differ (dropped -> zero contribution from that expert)
+    assert float(jnp.abs(o_small - o_big).max()) > 1e-6
+    assert bool(jnp.isfinite(o_small).all())
+
+
+def test_weight_gather_flag_is_numerically_neutral(moe_setup):
+    p, x = moe_setup
+    o1, _ = L.moe_apply(p, x, _Cfg.moe, capacity=64)
+    o2, _ = L.moe_apply(p, x, _Cfg.moe, capacity=64, gather_weights=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_load_balance_loss_prefers_uniform():
+    """lb loss is ~1 for uniform routing and larger for a collapsed router."""
+    e, t, k = 4, 256, 1
+    moe = MoEConfig(num_experts=e, top_k=k)
+    probs_uniform = jnp.full((t, e), 1 / e)
+    # emulate the loss formula directly
+    def lb(probs, eid):
+        onehot = jax.nn.one_hot(eid, e)
+        me = probs.mean(0)
+        ce = onehot.mean(0)
+        return float(e * jnp.sum(me * ce) / k)
+    uniform = lb(probs_uniform, jnp.arange(t) % e)
+    collapsed = lb(jnp.eye(e)[jnp.zeros(t, jnp.int32)],
+                   jnp.zeros(t, jnp.int32))
+    assert abs(uniform - 1.0) < 1e-5
+    assert collapsed > 3.0
+
+
+def test_moe_capacity_formula():
+    from repro.models.layers import moe_capacity
+    moe = MoEConfig(num_experts=8, top_k=2, capacity_factor=1.25)
+    c = moe_capacity(65536, moe)
+    assert c % 8 == 0
+    assert c >= 1.25 * 65536 * 2 / 8

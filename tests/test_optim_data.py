@@ -1,0 +1,100 @@
+"""Optimizers (vs hand-computed updates), schedules, data pipeline,
+checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.data.images import emnist_like
+from repro.data.lm import lm_batches, synthetic_token_stream
+from repro.data.loader import Batches
+from repro.optim import adafactor, adamw, cosine_warmup, sgd_momentum
+
+
+def test_sgdm_matches_manual():
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -1.0])}
+    opt = sgd_momentum(lr=0.1, momentum=0.9)
+    st = opt.init(p)
+    p1, st1 = opt.update(g, st, p)
+    np.testing.assert_allclose(np.asarray(p1["w"]), [1 - 0.05, 2 + 0.1])
+    p2, _ = opt.update(g, st1, p1)
+    # mu2 = 0.9*0.5 + 0.5 = 0.95 ; w = 0.95 - 0.1*0.95
+    np.testing.assert_allclose(np.asarray(p2["w"])[0], 0.95 - 0.095,
+                               rtol=1e-6)
+
+
+def test_adamw_first_step_is_lr_sized():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 0.3)}
+    opt = adamw(lr=1e-2, weight_decay=0.0)
+    p1, _ = opt.update(g, opt.init(p), p)
+    # bias-corrected first Adam step == lr * sign(g) (approx, eps small)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 1 - 1e-2, rtol=1e-4)
+
+
+def test_adafactor_factored_state_is_small():
+    p = {"w": jnp.ones((64, 128)), "b": jnp.ones((7,))}
+    opt = adafactor(lr=1e-3)
+    st = opt.init(p)
+    assert st["v"]["w"]["vr"].shape == (64,)
+    assert st["v"]["w"]["vc"].shape == (128,)
+    assert st["v"]["b"]["v"].shape == (7,)
+    g = {"w": jnp.full((64, 128), 0.1), "b": jnp.full((7,), 0.1)}
+    p1, _ = opt.update(g, st, p)
+    assert np.all(np.isfinite(np.asarray(p1["w"])))
+    assert not np.allclose(np.asarray(p1["w"]), 1.0)
+
+
+def test_cosine_warmup_schedule():
+    f = cosine_warmup(1.0, 10, 100)
+    assert float(f(jnp.int32(0))) < 0.2
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 0.11
+    assert float(f(jnp.int32(100))) <= 0.2
+
+
+def test_emnist_like_deterministic_and_learnable_geometry():
+    x1, y1, _, _ = emnist_like(n_train=100, n_test=10, seed=5)
+    x2, y2, _, _ = emnist_like(n_train=100, n_test=10, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (100, 784) and x1.dtype == np.float32
+    assert y1.min() >= 0 and y1.max() < 47
+
+
+def test_token_stream_has_repeats_and_range():
+    s = synthetic_token_stream(5000, vocab=100, seed=1)
+    assert s.min() >= 0 and s.max() < 100
+    it = lm_batches(s, batch=4, seq=32, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][0, 1:], b["labels"][0, :-1])
+
+
+def test_loader_epochs_cover_and_shuffle():
+    x = np.arange(100)[:, None].astype(np.float32)
+    y = np.arange(100)
+    dl = Batches([x, y], batch_size=10, shuffle=True, seed=0)
+    seen = np.concatenate([b[1] for b in dl.epoch(0)])
+    assert sorted(seen.tolist()) == list(range(100))
+    seen2 = np.concatenate([b[1] for b in dl.epoch(1)])
+    assert not np.array_equal(seen, seen2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "lst": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, tree, metadata={"note": "test"})
+    save_checkpoint(d, 7, jax.tree_util.tree_map(lambda x: x + 1, tree))
+    restored = restore_checkpoint(d, tree)  # latest = 7
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) + 1)
+    restored3 = restore_checkpoint(d, tree, step=3)
+    np.testing.assert_allclose(np.asarray(restored3["lst"][1]),
+                               np.asarray(tree["lst"][1]))
+    assert restored["nested"]["b"].dtype == np.dtype("bfloat16") or \
+        str(restored["nested"]["b"].dtype) == "bfloat16"

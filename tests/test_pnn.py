@@ -1,0 +1,162 @@
+"""PNN core invariants: partitioning, SIL, stage equivalence, training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import ARCH_NAMES, get
+from repro.core import losses, partition, pnn, sil as sil_lib
+from repro.data.images import emnist_like
+from repro.models import mlp as MLP
+from repro.models import model as M
+
+STAGEABLE = [n for n in ARCH_NAMES]
+
+
+def test_sil_matches_eq1():
+    key = jax.random.PRNGKey(0)
+    s = sil_lib.make_sil(key, 60, 47, kappa=10.0)
+    assert s.shape == (60, 47)
+    assert float(s.min()) >= 0.0 and float(s.max()) <= 10.0
+    # kappa scales linearly (same uniforms)
+    s2 = sil_lib.make_sil(key, 60, 47, kappa=2.0)
+    np.testing.assert_allclose(np.asarray(s2) * 5.0, np.asarray(s), rtol=1e-6)
+
+
+def test_sil_lookup_shape():
+    s = sil_lib.make_sil(jax.random.PRNGKey(1), 8, 5, 1.0)
+    labels = jnp.array([[0, 4], [2, 2]])
+    out = sil_lib.sil_lookup(s, labels)
+    assert out.shape == (2, 2, 8)
+    np.testing.assert_allclose(out[0, 1], s[:, 4])
+
+
+@pytest.mark.parametrize("n_stages", [2, 3])
+def test_plan_bounds_cover(n_stages):
+    cfg = get("mistral-large-123b")  # 88 groups
+    plan = partition.make_plan(cfg, n_stages)
+    assert plan.bounds[0][0] == 0
+    assert plan.bounds[-1][1] == M.n_groups(cfg)
+    for (a0, a1), (b0, b1) in zip(plan.bounds, plan.bounds[1:]):
+        assert a1 == b0
+
+
+@pytest.mark.parametrize("name", ["qwen2-1.5b", "jamba-1.5-large-398b",
+                                  "xlstm-125m", "whisper-tiny",
+                                  "llava-next-34b", "grok-1-314b"])
+def test_stage_chain_equals_full_forward(name, smoke_params_cache):
+    """Chaining stage_forward over all stages == the unpartitioned forward.
+
+    This is the paper's 'partitions can be joined' property, exactly."""
+    cfg, params = smoke_params_cache(name)
+    plan = partition.make_plan(cfg, 2)
+    batch = make_batch(cfg)
+    full_logits, _ = M.forward(cfg, params, batch, remat=False)
+    x = batch
+    for k in range(plan.n_stages):
+        sp = partition.slice_stage_params(cfg, plan, params, k)
+        x, _ = partition.stage_forward(cfg, plan, k, sp, x, remat=False)
+    np.testing.assert_allclose(
+        np.asarray(x, np.float32), np.asarray(full_logits, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("name", ["qwen2-1.5b", "xlstm-125m"])
+def test_slice_join_roundtrip(name, smoke_params_cache):
+    cfg, params = smoke_params_cache(name)
+    plan = partition.make_plan(cfg, 2)
+    stages = [partition.slice_stage_params(cfg, plan, params, k)
+              for k in range(plan.n_stages)]
+    joined = partition.join_stage_params(cfg, plan, stages)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(joined)[0]):
+        assert jnp.array_equal(a, b), pa
+
+
+def test_stage_params_disjoint_groups():
+    """Each stage's group params are disjoint slices (the memory claim)."""
+    cfg = get("qwen2-1.5b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    plan = partition.make_plan(cfg, 2)
+    sizes = []
+    for k in range(plan.n_stages):
+        sp = partition.slice_stage_params(cfg, plan, params, k)
+        sizes.append(sum(l.size for l in jax.tree_util.tree_leaves(
+            sp["groups"])))
+    total = sum(l.size for l in jax.tree_util.tree_leaves(params["groups"]))
+    assert sum(sizes) == total
+
+
+def test_mlp_pnn_beats_untrained_and_recovery_helps():
+    cfg = MLP.MLPConfig()  # the paper's exact network
+    data = emnist_like(n_train=28200, n_test=1880, seed=3, noise=0.5)
+    hp = pnn.PaperHP(n_left=5, n_right=160, n_recovery=5, batch_size=1410,
+                     lr_right=0.003)
+    _, hist = pnn.train_mlp_pnn(cfg, data, hp, jax.random.PRNGKey(0),
+                                eval_every=20)
+    acc_after_right = max(a for a, ph in zip(hist["acc"], hist["phase"])
+                          if ph == "right")
+    acc_after_rec = hist["acc"][-1]
+    assert acc_after_right > 0.2  # far above the 2.1% chance level
+    assert acc_after_rec >= acc_after_right - 0.05  # recovery not harmful
+
+
+def test_mlp_left_loss_decreases_with_sil():
+    cfg = MLP.MLPConfig(sizes=(784, 32, 16, 16, 47), cut=2)
+    data = emnist_like(n_train=4700, n_test=470, seed=1)
+    tx, ty = data[0], data[1]
+    params = MLP.init_params(cfg, jax.random.PRNGKey(0))
+    left = params[:cfg.cut]
+    sil = sil_lib.make_sil(jax.random.PRNGKey(1), cfg.boundary_width, 47, 10.0)
+    from repro.optim import make_optimizer
+    opt = make_optimizer("sgdm", 0.01, momentum=0.9)
+    st = opt.init(left)
+    step = pnn._make_left_step(cfg, opt)
+    losses_seen = []
+    for ep in range(3):
+        for i in range(0, 4700, 470):
+            left, st, l = step(left, st, tx[i:i+470], ty[i:i+470], sil)
+            losses_seen.append(float(l))
+    assert losses_seen[-1] < losses_seen[0]
+
+
+def test_transformer_fig5_parallel_mode():
+    """Fig. 5 at transformer scale: all stages train concurrently on SIL
+    inputs/targets; both stage losses must decrease and the join be usable."""
+    cfg = get("qwen2-1.5b", smoke=True)
+    plan = partition.make_plan(cfg, 2)
+    params = jax.tree_util.tree_map(lambda x: x, __import__(
+        "repro.models.model", fromlist=["model"]).init_params(
+            cfg, jax.random.PRNGKey(0)))
+    from repro.data.lm import synthetic_token_stream, lm_batches
+    stream = synthetic_token_stream(8000, cfg.vocab_size, seed=0)
+    it = lm_batches(stream, 4, 32, seed=0)
+    bs = [{k: jnp.asarray(v) for k, v in next(it).items()} for _ in range(4)]
+    pc = pnn.PNNLMConfig(n_stages=2, kappa=1.0,
+                         stages=[pnn.PNNStageHP(steps=5, lr=1e-3)] * 2)
+    joined, hist = pnn.pnn_parallel_train_lm(
+        cfg, plan, params, lambda i: bs[i % 4], pc, jax.random.PRNGKey(1))
+    for k in (0, 1):
+        ls = [l for s, l in zip(hist["stage"], hist["loss"]) if s == k]
+        assert ls[-1] < ls[0], f"stage {k} loss did not decrease"
+    logits, _ = M.forward(cfg, joined, bs[0])
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_transformer_pnn_stage0_loss_decreases():
+    cfg = get("qwen2-1.5b", smoke=True)
+    plan = partition.make_plan(cfg, 2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.data.lm import synthetic_token_stream, lm_batches
+    stream = synthetic_token_stream(8000, cfg.vocab_size, seed=0)
+    it = lm_batches(stream, 4, 32, seed=0)
+    bs = [next(it) for _ in range(4)]
+    bf = lambda i: {k: jnp.asarray(v) for k, v in bs[i % 4].items()}  # noqa
+    pc = pnn.PNNLMConfig(n_stages=2, kappa=1.0,
+                         stages=[pnn.PNNStageHP(steps=5, lr=2e-3),
+                                 pnn.PNNStageHP(steps=5, lr=2e-3)])
+    _, hist = pnn.pnn_train_lm(cfg, plan, params, bf, pc, jax.random.PRNGKey(1))
+    s0 = [l for s, l in zip(hist["stage"], hist["loss"]) if s == 0]
+    assert s0[-1] < s0[0]

@@ -1,0 +1,110 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition, sil as sil_lib
+from repro.core.losses import cross_entropy
+from repro.models import layers as L
+from repro.models import mlp as MLP
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(2, 128), m=st.integers(2, 64),
+       kappa=st.floats(0.01, 100.0))
+@settings(**SETTINGS)
+def test_sil_range_property(n, m, kappa):
+    """Eq. 1 invariant: entries in [0, kappa], shape (N_P, M)."""
+    s = sil_lib.make_sil(jax.random.PRNGKey(0), n, m, kappa)
+    assert s.shape == (n, m)
+    assert float(s.min()) >= 0.0
+    assert float(s.max()) <= kappa + 1e-5
+
+
+@given(g=st.integers(1, 97), k=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_partition_plan_properties(g, k):
+    """Plans are contiguous, cover [0, G), and are balanced within 1."""
+    if k > g:
+        return
+    # replicate the balanced-split logic used by make_plan
+    base, rem = divmod(g, k)
+    sizes = [base + (1 if i < rem else 0) for i in range(k)]
+    assert sum(sizes) == g
+    assert max(sizes) - min(sizes) <= 1
+
+
+@given(layers=st.lists(st.integers(4, 32), min_size=2, max_size=6),
+       cut=st.integers(1, 5))
+@settings(**SETTINGS)
+def test_mlp_stage_chain_equals_full(layers, cut):
+    """forward_range composition == full forward for any cut point."""
+    sizes = tuple([16] + layers + [8])
+    cfg = MLP.MLPConfig(sizes=sizes, cut=min(cut, len(sizes) - 2),
+                        n_classes=8)
+    params = MLP.init_params(cfg, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+    h = MLP.forward_range(cfg, params[:cfg.cut], x, 0, cfg.cut)
+    out2 = MLP.forward_range(cfg, params[cfg.cut:], h, cfg.cut, cfg.n_layers)
+    full = MLP.forward(cfg, params, x)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(full), rtol=1e-5,
+                               atol=1e-5)
+
+
+@given(b=st.integers(1, 3), s=st.integers(2, 33), h=st.sampled_from([2, 4]),
+       d=st.sampled_from([8, 16]))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(b, s, h, d):
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d))
+    cos, sin = L.rope_tables(jnp.arange(s), d, 1.0, 10000.0)
+    y = L.rope_apply(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4, atol=1e-4)
+
+
+@given(b=st.integers(1, 4), v=st.integers(3, 40))
+@settings(**SETTINGS)
+def test_cross_entropy_bounds(b, v):
+    """CE of uniform logits == log V; CE >= 0; padded vocab invariant."""
+    logits = jnp.zeros((b, v))
+    labels = jnp.zeros((b,), jnp.int32)
+    ce = float(cross_entropy(logits, labels))
+    assert abs(ce - np.log(v)) < 1e-5
+    padded = jnp.concatenate([logits, jnp.full((b, 7), 123.0)], -1)
+    ce_pad = float(cross_entropy(padded, labels, vocab_size=v))
+    assert abs(ce_pad - ce) < 1e-5
+
+
+@given(kappa=st.floats(0.1, 50.0), lr_scale=st.floats(0.1, 10.0))
+@settings(max_examples=10, deadline=None)
+def test_sil_loss_scales_quadratically(kappa, lr_scale):
+    """MSE vs kappa-scaled SIL scales ~ quadratically when act == 0 — the
+    analytic backbone of the paper's kappa<->lr analogy (Fig. 9)."""
+    key = jax.random.PRNGKey(3)
+    sil1 = sil_lib.make_sil(key, 32, 10, kappa)
+    sil2 = sil_lib.make_sil(key, 32, 10, kappa * 2)
+    act = jnp.zeros((20, 32))
+    lab = jnp.arange(20, dtype=jnp.int32) % 10
+    from repro.core.losses import sil_stage_loss
+    l1 = float(sil_stage_loss(act, sil1, lab))
+    l2 = float(sil_stage_loss(act, sil2, lab))
+    assert abs(l2 / l1 - 4.0) < 1e-3
+
+
+@given(seq=st.integers(1, 64), window=st.sampled_from([0, 8, 16]))
+@settings(max_examples=15, deadline=None)
+def test_chunked_attention_matches_naive(seq, window):
+    from repro.kernels.flash_attention import ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, seq, 2, 8))
+    k = jax.random.normal(ks[1], (1, seq, 2, 8))
+    v = jax.random.normal(ks[2], (1, seq, 2, 8))
+    a = ref.chunked_attention(q, k, v, causal=True, window=window, chunk=16)
+    b = ref.naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)

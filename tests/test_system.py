@@ -1,0 +1,100 @@
+"""End-to-end behaviour tests for the PNN system (paper claims, reduced)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import get
+from repro.core import losses, pnn, partition
+from repro.data.images import emnist_like
+from repro.launch.steps import (build_decode_step, build_prefill_step,
+                                build_train_step, build_pnn_stage_step,
+                                pick_accum, pick_optimizer_name)
+from repro.models import model as M
+from repro.models.mlp import MLPConfig
+from repro.optim import make_optimizer
+
+
+@pytest.fixture(scope="module")
+def paper_data():
+    return emnist_like(n_train=28200, n_test=2820, seed=0, noise=0.5)
+
+
+def test_pnn_vs_baseline_at_comparable_macs(paper_data):
+    """Claim C1 (reduced): PNN reaches accuracy in the baseline's ballpark
+    with fewer MACs.  Full-fidelity version in benchmarks/paper_figures."""
+    cfg = MLPConfig()
+    hp = pnn.PaperHP(n_left=5, n_right=120, n_baseline=15, batch_size=1410,
+                     lr_right=0.003)
+    _, hb = pnn.train_mlp_baseline(cfg, paper_data, hp, jax.random.PRNGKey(0),
+                                   eval_every=5)
+    _, hpn = pnn.train_mlp_pnn(cfg, paper_data, hp, jax.random.PRNGKey(1),
+                               eval_every=20)
+    acc_b, macs_b = hb["acc"][-1], hb["macs"][-1]
+    # best PNN accuracy reached within the baseline's MACs budget
+    acc_p_within = max(a for a, m in zip(hpn["acc"], hpn["macs"])
+                       if m <= macs_b)
+    assert acc_p_within > acc_b  # strictly better accuracy per MAC
+
+
+def test_fig5_parallel_mode_runs(paper_data):
+    """Fig. 5 mode is implemented (the paper deems it impractical; we assert
+    it runs and produces a finite joined model, not that it's good)."""
+    cfg = MLPConfig(sizes=(784, 32, 16, 16, 47), cut=2)
+    joined, acc = pnn.train_mlp_parallel_sil(
+        cfg, paper_data, pnn.PaperHP(batch_size=1410), jax.random.PRNGKey(0),
+        n_stages=3, epochs=2)
+    assert 0.0 <= acc <= 1.0
+    assert all(np.all(np.isfinite(np.asarray(p["w"]))) for p in joined)
+
+
+def test_train_step_builder_single_device():
+    """The production train step (accum > 1) runs unsharded on CPU."""
+    cfg = get("qwen2-1.5b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", 1e-3)
+    state = opt.init(params)
+    step = jax.jit(build_train_step(cfg, opt, accum=2))
+    batch = make_batch(cfg, b=4, s=16)
+    p1, s1, m1 = step(params, state, batch)
+    p2, s2, m2 = step(p1, s1, batch)
+    assert jnp.isfinite(m1["loss"]) and jnp.isfinite(m2["loss"])
+    assert float(m2["ce"]) < float(m1["ce"]) + 0.5
+
+
+def test_pnn_stage_step_builder_runs():
+    cfg = get("qwen2-1.5b", smoke=True)
+    plan = partition.make_plan(cfg, 2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer("adamw", 1e-3)
+    sp = partition.slice_stage_params(cfg, plan, params, 0)
+    st = opt.init(sp)
+    step = jax.jit(build_pnn_stage_step(cfg, plan, 0, opt))
+    batch = make_batch(cfg, b=2, s=16)
+    labels = batch.pop("labels")
+    sil = jnp.ones((cfg.d_model, cfg.vocab_padded), jnp.float32)
+    sp1, st1, l1 = step(sp, st, batch, labels, sil)
+    sp2, _, l2 = step(sp1, st1, batch, labels, sil)
+    assert float(l2) < float(l1)
+
+
+def test_serve_path_builders():
+    cfg = get("qwen2-1.5b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(build_prefill_step(cfg, cache_len=24))
+    decode = jax.jit(build_decode_step(cfg))
+    batch = {"tokens": make_batch(cfg, b=2, s=16)["tokens"]}
+    logits, cache, pos = prefill(params, batch)
+    assert logits.shape == (2, cfg.vocab_padded)
+    l1, cache = decode(params, cache, jnp.argmax(logits[:, :cfg.vocab_size],
+                                                 -1).astype(jnp.int32), pos)
+    assert l1.shape == (2, cfg.vocab_padded)
+    assert bool(jnp.isfinite(l1.astype(jnp.float32)).all())
+
+
+def test_optimizer_and_accum_picks():
+    big = get("jamba-1.5-large-398b")
+    small = get("qwen2-1.5b")
+    assert pick_optimizer_name(big) == "adafactor"
+    assert pick_optimizer_name(small) == "adamw"
