@@ -13,18 +13,16 @@ in EXPERIMENTS.md §Paper-claims.
 from __future__ import annotations
 
 import time
-from dataclasses import replace
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pnn, sil as sil_lib
 from repro.core.losses import cross_entropy
+from repro.core.pnn import PaperHP
 from repro.data.images import emnist_like
 from repro.models import mlp as MLP
 from repro.models.mlp import MLPConfig
 from repro.optim import make_optimizer
+from repro.train import recipes, spec_from_paper_hp
 
 
 def _data(full):
@@ -37,7 +35,20 @@ def _hp(full, **kw):
                 n_baseline=40 if full else 20, batch_size=1410,
                 lr=0.01, lr_right=0.003, kappa=10.0)
     base.update(kw)
-    return pnn.PaperHP(**base)
+    return PaperHP(**base)
+
+
+def _train_baseline(cfg, data, hp, key, eval_every=1):
+    _, h = recipes.run_mlp_baseline(cfg, data, spec_from_paper_hp(hp), key,
+                                    eval_every=eval_every)
+    return None, h.to_mlp_legacy()
+
+
+def _train_pnn(cfg, data, hp, key, eval_every=1):
+    """Fig. 3 (+ recovery) through the repro.train phase API."""
+    _, h = recipes.run_mlp_fig3(cfg, data, spec_from_paper_hp(hp), key,
+                                eval_every=eval_every)
+    return None, h.to_mlp_legacy()
 
 
 # -- Figure 1: weight randomness after training -----------------------------
@@ -89,9 +100,9 @@ def fig6_pnn_vs_baseline(full=False, repeats=None):
     hp = _hp(full)
     accs_b, accs_p, curves = [], [], []
     for r in range(reps):
-        _, hb = pnn.train_mlp_baseline(MLPConfig(), data, hp,
+        _, hb = _train_baseline(MLPConfig(), data, hp,
                                        jax.random.PRNGKey(r), eval_every=5)
-        _, hpn = pnn.train_mlp_pnn(MLPConfig(), data, hp,
+        _, hpn = _train_pnn(MLPConfig(), data, hp,
                                    jax.random.PRNGKey(100 + r),
                                    eval_every=10)
         accs_b.append(hb["acc"][-1])
@@ -119,7 +130,7 @@ def fig7_nl_sweep(full=False):
             # right-phase lr scaled by the kappa<->lr analogy so both kappa
             # settings train stably (boundary scale ~ kappa)
             hp = _hp(full, n_left=n_l, kappa=kappa, lr_right=0.03 / kappa)
-            _, h = pnn.train_mlp_pnn(MLPConfig(), data, hp,
+            _, h = _train_pnn(MLPConfig(), data, hp,
                                      jax.random.PRNGKey(n_l), eval_every=1000)
             accs.append((n_l, h["acc"][-1]))
         out[f"kappa={kappa}"] = accs
@@ -135,7 +146,7 @@ def fig8_kappa_sweep(full=False):
     accs = []
     for k in kappas:
         hp = _hp(full, kappa=k)
-        _, h = pnn.train_mlp_pnn(MLPConfig(), data, hp,
+        _, h = _train_pnn(MLPConfig(), data, hp,
                                  jax.random.PRNGKey(7), eval_every=1000)
         accs.append((k, h["acc"][-1]))
     best = max(a for _, a in accs)
@@ -160,9 +171,9 @@ def fig9_kappa_lr_equivalence(full=False):
     data = _data(full)
     hp_a = _hp(full, kappa=10.0, lr=0.01, lr_right=None)   # paper-exact pair
     hp_b = _hp(full, kappa=1.0, lr=0.1, lr_right=None)
-    _, ha = pnn.train_mlp_pnn(MLPConfig(), data, hp_a, jax.random.PRNGKey(0),
+    _, ha = _train_pnn(MLPConfig(), data, hp_a, jax.random.PRNGKey(0),
                               eval_every=5)
-    _, hb = pnn.train_mlp_pnn(MLPConfig(), data, hp_b, jax.random.PRNGKey(0),
+    _, hb = _train_pnn(MLPConfig(), data, hp_b, jax.random.PRNGKey(0),
                               eval_every=5)
     a = np.array(ha["acc"])
     b = np.array(hb["acc"])
@@ -182,7 +193,7 @@ def fig10_recovery(full=False):
     data = _data(full)
     hp = _hp(full, n_recovery=10 if full else 5,
              n_right=160 if full else 100, lr_recovery=1e-4)
-    _, h = pnn.train_mlp_pnn(MLPConfig(), data, hp, jax.random.PRNGKey(0),
+    _, h = _train_pnn(MLPConfig(), data, hp, jax.random.PRNGKey(0),
                              eval_every=10)
     acc_right = max(a for a, ph in zip(h["acc"], h["phase"])
                     if ph == "right")

@@ -106,6 +106,85 @@ def bench_core_paths():
     return rows
 
 
+def bench_train_api():
+    """Scan-based epochs (repro.train) vs the legacy per-step python loop
+    with a blocking float(loss) host sync — the quickstart MLP baseline
+    workload.  Derived column reports steps/s for both and the speedup."""
+    from repro.data.images import emnist_like
+    from repro.models import mlp as MLP
+    from repro.models.mlp import MLPConfig
+    from repro.core import losses
+    from repro.optim import make_optimizer
+    from repro.train import MLPBackend, StageSpec, TrainSpec
+    from repro.train.backends import scanned_epoch_fn
+
+    cfg = MLPConfig()
+    data = emnist_like(n_train=28200, n_test=470, seed=0, noise=0.5)
+    tx, ty = data[0], data[1]
+    epochs = 3
+    spec = TrainSpec(batch_size=1410,
+                     baseline=StageSpec(epochs=epochs, lr=0.01,
+                                        optimizer="sgdm"))
+    be = MLPBackend(cfg, data, spec)
+    n_steps = be.batches_per_epoch * epochs
+    params0 = MLP.init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer("sgdm", 0.01, momentum=0.9)
+
+    @jax.jit
+    def step(p, s, x, y):
+        def loss_fn(p_):
+            return losses.cross_entropy(
+                MLP.forward_range(cfg, p_, x, 0, cfg.n_layers), y)
+        l, g = jax.value_and_grad(loss_fn)(p)
+        p2, s2 = opt.update(g, s, p)
+        return p2, s2, l
+
+    def fresh_params():
+        # per-call copy: scanned_epoch_fn donates its inputs on accelerators
+        return jax.tree_util.tree_map(jnp.copy, params0)
+
+    def legacy_loop():
+        """The pre-redesign inner loop: python batches + per-step host sync."""
+        params = fresh_params()
+        st = opt.init(params)
+        bs = spec.batch_size
+        n = be.samples_per_epoch
+        for ep in range(epochs):
+            for i in range(0, n, bs):
+                params, st, loss = step(params, st, tx[i:i + bs],
+                                        ty[i:i + bs])
+                float(loss)              # the old per-step host sync
+        return params
+
+    epoch_fn = scanned_epoch_fn(be.build_baseline_step(opt))
+    batches = be.epoch_arrays(0, shuffle=False)
+
+    def scan_loop():
+        params = fresh_params()
+        st = opt.init(params)
+        for ep in range(epochs):
+            params, st, _ = epoch_fn(params, st, batches)
+        return params
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return time.perf_counter() - t0
+
+    # interleaved min-of-reps: both loops see the same scheduler noise
+    legacy_loop(), scan_loop()   # warmup/compile
+    us_legacy = us_scan = float("inf")
+    for _ in range(5):
+        us_legacy = min(us_legacy, timed(legacy_loop) * 1e6)
+        us_scan = min(us_scan, timed(scan_loop) * 1e6)
+    sps_legacy = n_steps / us_legacy * 1e6
+    sps_scan = n_steps / us_scan * 1e6
+    return [("mlp_epoch_legacy_hostsync", us_legacy,
+             f"steps_per_s={sps_legacy:.0f}"),
+            ("mlp_epoch_scan_device_metrics", us_scan,
+             f"steps_per_s={sps_scan:.0f};speedup={us_legacy/us_scan:.2f}x")]
+
+
 def bench_kernels():
     from repro.kernels.flash_attention.kernel import flash_attention_tpu
     from repro.kernels.flash_attention import ref as fa_ref
@@ -130,7 +209,8 @@ def bench_kernels():
 
 def main() -> None:
     print("name,us_per_call,derived")
-    for fn in (bench_core_paths, bench_kernels, bench_figures):
+    for fn in (bench_core_paths, bench_train_api, bench_kernels,
+               bench_figures):
         for name, us, derived in fn():
             print(f"{name},{us:.0f},{derived}")
 

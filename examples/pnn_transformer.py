@@ -19,10 +19,11 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import get  # noqa: E402
-from repro.core import losses, partition, pnn  # noqa: E402
+from repro.core import losses, partition  # noqa: E402
 from repro.data.lm import lm_batches, synthetic_token_stream  # noqa: E402
 from repro.models import model as M  # noqa: E402
 from repro.optim import make_optimizer  # noqa: E402
+from repro.train import StageSpec, TrainSpec, recipes  # noqa: E402
 
 
 def eval_ppl(cfg, params, batches):
@@ -63,20 +64,21 @@ def main():
     key = jax.random.PRNGKey(0)
     params0 = M.init_params(cfg, key)
 
-    # --- PNN ---------------------------------------------------------------
-    pc = pnn.PNNLMConfig(
+    # --- PNN (sequential = Fig. 3 lifted to LMs; --parallel = Fig. 5) ------
+    spec = TrainSpec(
         n_stages=args.stages, kappa=1.0,
-        stages=[pnn.PNNStageHP(steps=args.steps, lr=1e-3)] * args.stages,
-        recovery_steps=0 if args.parallel else args.steps // 2,
-        recovery_lr=2e-4)
-    trainer = pnn.pnn_parallel_train_lm if args.parallel else pnn.pnn_train_lm
-    joined, hist = trainer(
-        cfg, plan, params0, lambda i: train_batches[i % 32], pc,
-        jax.random.PRNGKey(1))
+        stages=tuple(StageSpec(steps=args.steps, lr=1e-3, optimizer="adamw")
+                     for _ in range(args.stages)),
+        recovery=None if args.parallel else StageSpec(
+            steps=args.steps // 2, lr=2e-4, optimizer="adamw"))
+    run = recipes.run_lm_parallel if args.parallel \
+        else recipes.run_lm_sequential
+    joined, hist = run(cfg, plan, params0, lambda i: train_batches[i % 32],
+                       spec, jax.random.PRNGKey(1))
     for k in range(args.stages):
-        ls = [l for s, l in zip(hist["stage"], hist["loss"]) if s == k]
+        ls = hist.column("loss", stage=k)
         print(f"  stage {k}: loss {ls[0]:.3f} -> {ls[-1]:.3f}")
-    rec = [l for s, l in zip(hist["stage"], hist["loss"]) if s == -1]
+    rec = hist.column("loss", phase="recovery")
     if rec:
         print(f"  recovery: loss {rec[0]:.3f} -> {rec[-1]:.3f}")
     ppl_pnn = eval_ppl(cfg, joined, eval_batches)

@@ -1,10 +1,12 @@
 """Quickstart: the paper's experiment end-to-end in ~2 minutes on CPU.
 
-Trains the 6-layer EMNIST classifier (784-80-60-60-60-47) two ways:
-  1. conventional baseline (N_B epochs, the paper's Fig. 6 grey curve)
-  2. PNN: left partition vs synthetic intermediate labels (Eq. 1), boundary
-     materialization, right partition on stored activations, then the §5
-     recovery phase.
+Trains the 6-layer EMNIST classifier (784-80-60-60-60-47) two ways through
+the `repro.train` phase API:
+  1. conventional baseline — phase list [BaselinePhase()]
+  2. PNN (paper Fig. 3 + §5) — [SilStagePhase(0), BoundaryMaterializePhase,
+     FrozenPrefixPhase(1), RecoveryPhase(0)]: left partition vs synthetic
+     intermediate labels (Eq. 1), one boundary materialization, right
+     partition on stored activations, recovery.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--full]
 """
@@ -15,9 +17,9 @@ sys.path.insert(0, "src")
 
 import jax  # noqa: E402
 
-from repro.core import pnn  # noqa: E402
 from repro.data.images import load_emnist  # noqa: E402
 from repro.models.mlp import MLPConfig  # noqa: E402
+from repro.train import StageSpec, TrainSpec, recipes  # noqa: E402
 
 
 def main():
@@ -29,22 +31,28 @@ def main():
     cfg = MLPConfig()  # the paper's exact network, cut after layer 2
     n = 112800 if args.full else 28200
     data = load_emnist(n_train=n, n_test=4700, seed=0, noise=0.5)
-    hp = pnn.PaperHP(
-        n_left=5, n_right=160 if args.full else 80,
-        n_baseline=40 if args.full else 20,
-        n_recovery=10 if args.full else 5,
-        batch_size=1410, lr=0.01, lr_right=0.003, kappa=10.0)
+    n_left, n_right = 5, 160 if args.full else 80
+    n_base = 40 if args.full else 20
+    n_rec = 10 if args.full else 5
+    spec = TrainSpec(
+        kappa=10.0, batch_size=1410,
+        stages=(StageSpec(epochs=n_left, lr=0.01, optimizer="sgdm"),
+                StageSpec(epochs=n_right, lr=0.003, optimizer="sgdm")),
+        baseline=StageSpec(epochs=n_base, lr=0.01, optimizer="sgdm"),
+        recovery=StageSpec(epochs=n_rec, lr=0.0003, optimizer="sgdm"))
 
-    print(f"== baseline ({hp.n_baseline} epochs) ==")
-    _, hb = pnn.train_mlp_baseline(cfg, data, hp, jax.random.PRNGKey(0),
-                                   eval_every=5)
+    print(f"== baseline ({n_base} epochs) ==")
+    _, hist_b = recipes.run_mlp_baseline(cfg, data, spec,
+                                         jax.random.PRNGKey(0), eval_every=5)
+    hb = hist_b.to_mlp_legacy()
     for m, a in zip(hb["macs"], hb["acc"]):
         print(f"  {m/1e9:8.1f} GMACs  acc={a:.3f}")
 
-    print(f"== PNN (N_L={hp.n_left}, N_R={hp.n_right}, "
-          f"kappa={hp.kappa}, recovery={hp.n_recovery}) ==")
-    _, hp_hist = pnn.train_mlp_pnn(cfg, data, hp, jax.random.PRNGKey(1),
-                                   eval_every=10)
+    print(f"== PNN (N_L={n_left}, N_R={n_right}, "
+          f"kappa={spec.kappa}, recovery={n_rec}) ==")
+    _, hist_p = recipes.run_mlp_fig3(cfg, data, spec, jax.random.PRNGKey(1),
+                                     eval_every=10)
+    hp_hist = hist_p.to_mlp_legacy()
     for ph, m, a in zip(hp_hist["phase"], hp_hist["macs"], hp_hist["acc"]):
         print(f"  [{ph:9s}] {m/1e9:8.1f} GMACs  acc={a:.3f}")
 

@@ -21,11 +21,12 @@ import numpy as np  # noqa: E402
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint  # noqa: E402
 from repro.configs import get  # noqa: E402
-from repro.core import losses, partition, pnn  # noqa: E402
+from repro.core import losses, partition  # noqa: E402
 from repro.data.lm import lm_batches, synthetic_token_stream  # noqa: E402
 from repro.launch.steps import build_train_step  # noqa: E402
 from repro.models import model as M  # noqa: E402
 from repro.optim import cosine_warmup, make_optimizer  # noqa: E402
+from repro.train import StageSpec, TrainSpec, recipes  # noqa: E402
 
 
 def sized_config(arch: str, size: str):
@@ -68,19 +69,20 @@ def main():
 
     if args.pnn:
         plan = partition.make_plan(cfg, 2)
-        pc = pnn.PNNLMConfig(
+        spec = TrainSpec(
             n_stages=2, kappa=1.0,
-            stages=[pnn.PNNStageHP(steps=args.steps // 2, lr=args.lr,
-                                   optimizer="adamw")] * 2,
-            recovery_steps=args.steps // 4, recovery_lr=args.lr / 10)
+            stages=tuple(StageSpec(steps=args.steps // 2, lr=args.lr,
+                                   optimizer="adamw") for _ in range(2)),
+            recovery=StageSpec(steps=args.steps // 4, lr=args.lr / 10,
+                               optimizer="adamw"))
         t0 = time.time()
-        params, hist = pnn.pnn_train_lm(
+        params, hist = recipes.run_lm_sequential(
             cfg, plan, params,
             lambda i: {k: jnp.asarray(v) for k, v in next(it).items()},
-            pc, jax.random.PRNGKey(1))
+            spec, jax.random.PRNGKey(1))
         print(f"PNN training done in {time.time()-t0:.0f}s; "
               f"final stage losses: "
-              f"{[round(l, 3) for l in hist['loss'][-3:]]}")
+              f"{[round(l, 3) for l in hist.column('loss')[-3:]]}")
     else:
         opt = make_optimizer("adamw", cosine_warmup(args.lr, 20, args.steps))
         state = opt.init(params)

@@ -58,36 +58,61 @@ def stage_param_keys(cfg: ModelConfig, plan: PartitionPlan, k: int) -> List[str]
         if not cfg.tie_embeddings:
             keys.append("unembed")
         elif "tok_embed" not in keys:
-            keys.append("tok_embed")  # tied unembedding
+            # Tied unembedding on a stage that does NOT own the embedding:
+            # a FROZEN copy.  Giving the last stage a trainable "tok_embed"
+            # would let two stages train divergent copies of the same tensor,
+            # with join_stage_params silently keeping whichever came last.
+            keys.append("tied_unembed")
     return keys
 
 
 def slice_stage_params(cfg: ModelConfig, plan: PartitionPlan, params,
                        k: int) -> Dict[str, Any]:
     """Extract exactly the parameters stage k trains (paper: each partition
-    holds only its own params + optimizer state)."""
+    holds only its own params + optimizer state).  ``tied_unembed`` is a
+    frozen snapshot of the embedding, not a trainable copy."""
     g0, g1 = plan.bounds[k]
     out: Dict[str, Any] = {}
     for key in stage_param_keys(cfg, plan, k):
         if key == "groups":
             out[key] = jax.tree_util.tree_map(lambda a: a[g0:g1],
                                               params["groups"])
+        elif key == "tied_unembed":
+            out[key] = params["tok_embed"]
         else:
             out[key] = params[key]
     return out
 
 
+def refresh_tied_unembed(cfg: ModelConfig, plan: PartitionPlan,
+                         stage_params: List[Dict[str, Any]]) -> None:
+    """Sync the last stage's frozen tied-unembedding snapshot with stage 0's
+    (possibly already trained) embedding.  Call before training the last
+    stage in a sequential schedule so its CE phase sees the same table the
+    deployed joined network will use."""
+    if plan.n_stages > 1 and cfg.tie_embeddings:
+        last = stage_params[plan.n_stages - 1]
+        if "tied_unembed" in last:
+            # a COPY, not an alias: the last stage's train step donates its
+            # param buffers on accelerators, and donating an alias of stage
+            # 0's trainable embedding would delete it out from under the
+            # prefix forward and the final join
+            last["tied_unembed"] = jnp.copy(stage_params[0]["tok_embed"])
+
+
 def join_stage_params(cfg: ModelConfig, plan: PartitionPlan,
                       stage_params: List[Dict[str, Any]]) -> Dict[str, Any]:
     """Rebuild the full param tree from per-stage trees (paper: "the
-    partitions can be joined after this stage, to use the network")."""
+    partitions can be joined after this stage, to use the network").  Frozen
+    ``tied_unembed`` snapshots are dropped: the joined network's tied
+    unembedding is stage 0's trained embedding."""
     full: Dict[str, Any] = {}
     groups = [sp["groups"] for sp in stage_params]
     full["groups"] = jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate(xs, axis=0), *groups)
     for k, sp in enumerate(stage_params):
         for key, val in sp.items():
-            if key != "groups":
+            if key not in ("groups", "tied_unembed"):
                 full[key] = val
     return full
 
@@ -119,6 +144,12 @@ def stage_forward(cfg: ModelConfig, plan: PartitionPlan, k: int, stage_params,
     aux["n_prefix"] = n_prefix
     if k == plan.n_stages - 1:
         x = M.norm_apply_final(cfg, stage_params, x)
+        if "tied_unembed" in stage_params:
+            # frozen snapshot of the embedding: gradients must not flow into
+            # it (stage 0 owns the trainable copy)
+            up = dict(stage_params)
+            up["tok_embed"] = jax.lax.stop_gradient(up.pop("tied_unembed"))
+            return M.unembed(cfg, up, x), aux
         return M.unembed(cfg, stage_params, x), aux
     if cfg.enc_dec:
         return (x, enc_out), aux

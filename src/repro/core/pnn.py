@@ -1,32 +1,37 @@
-"""PNN training (paper §2-§5): sequential stage training with SIL targets,
-boundary materialization, recovery epochs, and the Fig.-5 parallel mode.
+"""DEPRECATED compatibility shim over ``repro.train``.
 
-Two concrete trainers:
+The five bespoke trainers that used to live here (``train_mlp_baseline``,
+``train_mlp_pnn``, ``train_mlp_parallel_sil``, ``pnn_train_lm``,
+``pnn_parallel_train_lm``) are now thin wrappers around the composable phase
+API in ``repro.train`` — one ``Trainer`` running a short phase list per
+schedule (see ``repro.train.recipes``).  New code should use ``repro.train``
+directly; these wrappers preserve the legacy signatures, RNG key schedules,
+and history formats, and are pinned against the new engine by
+tests/test_train_api.py (bit-exact for the standard decoder configs).
 
-* the **faithful MLP reproduction** (paper §3-§5: 6-layer FC net, EMNIST-47,
-  SGD+momentum, kappa, N_L/N_R, recovery) — used by benchmarks/paper_figures
-  and examples/quickstart.py;
-* the **transformer generalization** — stage-sequential SIL training of any
-  assigned architecture via core/partition.py.
+Two deliberate behavior changes vs the deleted loops: (1) tied-embedding
+models no longer train a second divergent copy of ``tok_embed`` in the last
+stage (see partition.stage_param_keys); (2) the engine applies MoE auxiliary
+losses and vision-token trimming consistently in BOTH sequential and
+parallel modes (the legacy parallel loop skipped MoE aux, and neither loop
+trimmed vision tokens).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import losses, partition, sil as sil_lib
+from repro.core import losses, partition
 from repro.models import mlp as MLP
-from repro.models import model as M
-from repro.optim import make_optimizer
+from repro.train import recipes, spec_from_lm_config, spec_from_paper_hp
+from repro.train.backends import mlp_test_accuracy  # noqa: F401  (re-export)
 
 
 # ==========================================================================
-# Faithful MLP reproduction (paper §3-§5)
+# legacy configs (converted to repro.train.TrainSpec internally)
 # ==========================================================================
 
 @dataclass
@@ -50,7 +55,30 @@ class PaperHP:
     shuffle: bool = False    # paper trains the left phase unshuffled
 
 
+@dataclass
+class PNNStageHP:
+    steps: int
+    lr: float = 1e-3
+    optimizer: str = "adamw"
+
+
+@dataclass
+class PNNLMConfig:
+    n_stages: int = 2
+    kappa: float = 1.0
+    stages: Optional[List[PNNStageHP]] = None
+    recovery_steps: int = 0
+    recovery_lr: float = 1e-4
+
+
+# ==========================================================================
+# helpers kept for callers that built their own loops
+# ==========================================================================
+
 def _batches(x, y, bs, *, shuffle, seed):
+    """Batch iterator.  NOTE: silently drops the last partial batch — use
+    dropped_sample_count() to surface how many samples that is; the
+    repro.train engine records it as history meta 'dropped_per_epoch'."""
     n = (len(x) // bs) * bs
     order = np.arange(len(x))
     if shuffle:
@@ -58,6 +86,11 @@ def _batches(x, y, bs, *, shuffle, seed):
     for i in range(0, n, bs):
         idx = order[i:i + bs]
         yield x[idx], y[idx]
+
+
+def dropped_sample_count(n: int, bs: int) -> int:
+    """How many tail samples _batches drops per epoch for dataset size n."""
+    return n - (n // bs) * bs
 
 
 def _make_left_step(cfg: MLP.MLPConfig, opt):
@@ -84,66 +117,16 @@ def _make_right_step(cfg: MLP.MLPConfig, opt):
     return step
 
 
-def _make_baseline_step(cfg: MLP.MLPConfig, opt):
-    @jax.jit
-    def step(params, state, x, y):
-        def loss_fn(p):
-            logits = MLP.forward_range(cfg, p, x, 0, cfg.n_layers)
-            return losses.cross_entropy(logits, y)
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, state = opt.update(grads, state, params)
-        return params, state, loss
-    return step
-
-
-def _make_recovery_step(cfg: MLP.MLPConfig, opt):
-    """§5: continue training the left part with the right part frozen."""
-    @jax.jit
-    def step(left, state, right, x, y):
-        def loss_fn(pl):
-            h = MLP.forward_range(cfg, pl, x, 0, cfg.cut)
-            logits = MLP.forward_range(
-                cfg, jax.lax.stop_gradient(right), h, cfg.cut, cfg.n_layers)
-            return losses.cross_entropy(logits, y)
-        loss, grads = jax.value_and_grad(loss_fn)(left)
-        left, state = opt.update(grads, state, left)
-        return left, state, loss
-    return step
-
-
-@functools.partial(jax.jit, static_argnums=(0,))
-def _mlp_eval(cfg: MLP.MLPConfig, params, x, y):
-    logits = MLP.forward_range(cfg, params, x, 0, cfg.n_layers)
-    return losses.accuracy(logits, y)
-
-
-def mlp_test_accuracy(cfg, params, tx, ty, bs=4096):
-    accs = []
-    for i in range(0, len(tx), bs):
-        accs.append(float(_mlp_eval(cfg, params, tx[i:i + bs], ty[i:i + bs]))
-                    * len(tx[i:i + bs]))
-    return sum(accs) / len(tx)
-
+# ==========================================================================
+# the five legacy trainers, as phase lists
+# ==========================================================================
 
 def train_mlp_baseline(cfg, data, hp: PaperHP, key, eval_every=1):
     """Conventional training of the unpartitioned network (paper baseline)."""
-    tx, ty, vx, vy = data
-    params = MLP.init_params(cfg, key)
-    opt = make_optimizer("sgdm", hp.lr, momentum=hp.momentum)
-    state = opt.init(params)
-    step = _make_baseline_step(cfg, opt)
-    macs_ps = MLP.macs(cfg)
-    hist = {"macs": [], "acc": [], "phase": []}
-    cum = 0
-    for ep in range(hp.n_baseline):
-        for x, y in _batches(tx, ty, hp.batch_size, shuffle=hp.shuffle, seed=ep):
-            params, state, _ = step(params, state, x, y)
-            cum += macs_ps * len(x)
-        if (ep + 1) % eval_every == 0 or ep == hp.n_baseline - 1:
-            hist["macs"].append(cum)
-            hist["acc"].append(mlp_test_accuracy(cfg, params, vx, vy))
-            hist["phase"].append("baseline")
-    return params, hist
+    spec = spec_from_paper_hp(hp)
+    params, hist = recipes.run_mlp_baseline(cfg, data, spec, key,
+                                            eval_every=eval_every)
+    return params, hist.to_mlp_legacy()
 
 
 def train_mlp_pnn(cfg, data, hp: PaperHP, key, eval_every=1):
@@ -153,67 +136,10 @@ def train_mlp_pnn(cfg, data, hp: PaperHP, key, eval_every=1):
     *joined* network after every epoch, against cumulative per-sample MACs —
     the x-axis of the paper's Figures 6/9/10.
     """
-    tx, ty, vx, vy = data
-    kp, ks = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
-    params = MLP.init_params(cfg, kp)
-    left, right = params[:cfg.cut], params[cfg.cut:]
-    sil = sil_lib.make_sil(ks, cfg.boundary_width, cfg.n_classes, hp.kappa)
-
-    opt_l = make_optimizer("sgdm", hp.lr, momentum=hp.momentum)
-    opt_r = make_optimizer("sgdm", hp.lr_right or hp.lr, momentum=hp.momentum)
-    st_l, st_r = opt_l.init(left), opt_r.init(right)
-    lstep, rstep = _make_left_step(cfg, opt_l), _make_right_step(cfg, opt_r)
-
-    macs_l = MLP.macs(cfg, 0, cfg.cut)
-    macs_r = MLP.macs(cfg, cfg.cut, cfg.n_layers)
-    hist = {"macs": [], "acc": [], "phase": []}
-    cum = 0
-
-    def log(phase):
-        hist["macs"].append(cum)
-        hist["acc"].append(mlp_test_accuracy(cfg, left + right, vx, vy))
-        hist["phase"].append(phase)
-
-    # -- phase 1: left partition vs SIL (N_L epochs) -----------------------
-    for ep in range(hp.n_left):
-        for x, y in _batches(tx, ty, hp.batch_size, shuffle=hp.shuffle, seed=ep):
-            left, st_l, _ = lstep(left, st_l, x, y, sil)
-            cum += macs_l * len(x)
-        if (ep + 1) % eval_every == 0:
-            log("left")
-
-    # -- boundary materialization (stored once; the paper's only comm) -----
-    fwd_left = jax.jit(lambda p, x: MLP.forward_range(cfg, p, x, 0, cfg.cut))
-    stored = []
-    for x, _ in _batches(tx, ty, hp.batch_size, shuffle=False, seed=0):
-        stored.append(np.asarray(fwd_left(left, x)))
-    boundary = np.concatenate(stored)
-    ty_trunc = ty[: len(boundary)]
-
-    # -- phase 2: right partition on (stored boundary, true labels) --------
-    for ep in range(hp.n_right):
-        for h, y in _batches(boundary, ty_trunc, hp.batch_size,
-                             shuffle=hp.shuffle, seed=100 + ep):
-            right, st_r, _ = rstep(right, st_r, h, y)
-            cum += macs_r * len(h)
-        if (ep + 1) % eval_every == 0 or ep == hp.n_right - 1:
-            log("right")
-
-    # -- §5 recovery: left fine-tuned end-to-end, right frozen -------------
-    if hp.n_recovery:
-        rec_lr = hp.lr_recovery or (hp.lr_right or hp.lr) / 10.0
-        opt_rec = make_optimizer("sgdm", rec_lr, momentum=hp.momentum)
-        st_rec = opt_rec.init(left)
-        rec = _make_recovery_step(cfg, opt_rec)
-        macs_full = MLP.macs(cfg)
-        for ep in range(hp.n_recovery):
-            for x, y in _batches(tx, ty, hp.batch_size, shuffle=hp.shuffle,
-                                 seed=200 + ep):
-                left, st_rec, _ = rec(left, st_rec, right, x, y)
-                cum += macs_full * len(x)
-            log("recovery")
-
-    return left + right, hist
+    spec = spec_from_paper_hp(hp)
+    params, hist = recipes.run_mlp_fig3(cfg, data, spec, key,
+                                        eval_every=eval_every)
+    return params, hist.to_mlp_legacy()
 
 
 def train_mlp_parallel_sil(cfg, data, hp: PaperHP, key, n_stages=3,
@@ -221,76 +147,54 @@ def train_mlp_parallel_sil(cfg, data, hp: PaperHP, key, n_stages=3,
     """Fig. 5 mode: every stage trains simultaneously (no dependencies);
     interior stages use SIL as both input and label.  The paper deems this
     impractical (needs many epochs) — implemented for completeness."""
-    tx, ty, vx, vy = data
-    keys = jax.random.split(key, n_stages + 2)
-    params = MLP.init_params(cfg, keys[0])
-    # stage bounds at layer granularity (contiguous, balanced)
-    base, rem = divmod(cfg.n_layers, n_stages)
-    bounds, s = [], 0
-    for k in range(n_stages):
-        e = s + base + (1 if k < rem else 0)
-        bounds.append((s, e))
-        s = e
-    sils = [sil_lib.make_sil(keys[1 + k], cfg.sizes[bounds[k][1]],
-                             cfg.n_classes, hp.kappa)
-            for k in range(n_stages - 1)]
-
-    stages = [params[b0:b1] for b0, b1 in bounds]
-    opts = [make_optimizer("sgdm", hp.lr, momentum=hp.momentum)
-            for _ in range(n_stages)]
-    states = [o.init(sp) for o, sp in zip(opts, stages)]
-
-    def make_step(k):
-        b0, b1 = bounds[k]
-
-        @jax.jit
-        def step(sp, st, xin, y):
-            def loss_fn(p):
-                h = MLP.forward_range(cfg, p, xin, b0, b1)
-                if k == n_stages - 1:
-                    return losses.cross_entropy(h, y)
-                return losses.sil_stage_loss(h, sils[k], y)
-            loss, grads = jax.value_and_grad(loss_fn)(sp)
-            sp2, st2 = opts[k].update(grads, st, sp)
-            return sp2, st2, loss
-        return step
-
-    steps = [make_step(k) for k in range(n_stages)]
-    for ep in range(epochs):
-        for x, y in _batches(tx, ty, hp.batch_size, shuffle=True, seed=ep):
-            for k in range(n_stages):
-                xin = x if k == 0 else sil_lib.sil_lookup(sils[k - 1], y)
-                stages[k], states[k], _ = steps[k](stages[k], states[k], xin, y)
-    joined = sum(stages, [])
-    return joined, mlp_test_accuracy(cfg, joined, vx, vy)
+    from dataclasses import replace as _rp
+    from repro.train import StageSpec
+    spec = spec_from_paper_hp(hp)
+    spec = _rp(spec, n_stages=n_stages,
+               stages=tuple(StageSpec(epochs=epochs, lr=hp.lr,
+                                      optimizer="sgdm", momentum=hp.momentum)
+                            for _ in range(n_stages)))
+    joined, hist = recipes.run_mlp_fig5(cfg, data, spec, key,
+                                        n_stages=n_stages)
+    return joined, hist.column("acc", phase="parallel")[-1]
 
 
-# ==========================================================================
-# Transformer generalization
-# ==========================================================================
+def pnn_train_lm(cfg, plan, params, batch_fn: Callable[[int], dict],
+                 pnn: PNNLMConfig, key):
+    """Stage-sequential PNN training of a transformer LM.
 
-@dataclass
-class PNNStageHP:
-    steps: int
-    lr: float = 1e-3
-    optimizer: str = "adamw"
-
-
-@dataclass
-class PNNLMConfig:
-    n_stages: int = 2
-    kappa: float = 1.0
-    stages: Optional[List[PNNStageHP]] = None
-    recovery_steps: int = 0
-    recovery_lr: float = 1e-4
-
-
-def build_stage_step(cfg, plan, k, stage_sil, opt):
-    """Jitted train step for stage k of a transformer.
-
-    Interior stages: SIL-MSE on the boundary residual stream.
-    Last stage: CE (+ MoE aux) through the real unembedding.
+    batch_fn(step) -> {'tokens', 'labels', ...}.  Returns (joined params,
+    history).  Each stage holds ONLY its own params + optimizer state while
+    training (the paper's memory claim); earlier stages are frozen inputs.
     """
+    spec = spec_from_lm_config(pnn, plan.n_stages)
+    joined, hist = recipes.run_lm_sequential(cfg, plan, params, batch_fn,
+                                             spec, key)
+    return joined, hist.to_lm_legacy()
+
+
+def pnn_parallel_train_lm(cfg, plan, params, batch_fn: Callable[[int], dict],
+                          pnn: PNNLMConfig, key):
+    """Fig.-5 mode at transformer scale: ALL stages train simultaneously.
+
+    Interior stage k consumes synthetic inputs SIL_{k-1}[:, y_t] (broadcast
+    over positions) and regresses to SIL_k[:, y_t]; stage 0 consumes the real
+    batch; the last stage consumes SIL_{last-1}[:, y_t] and trains with CE.
+    Zero inter-stage dependencies — on the multi-pod mesh every pod trains
+    its stage concurrently with NO communication at all (the paper deems the
+    mode impractical for accuracy; implemented for completeness and measured
+    in examples/pnn_transformer.py --parallel).
+    """
+    spec = spec_from_lm_config(pnn, plan.n_stages)
+    joined, hist = recipes.run_lm_parallel(cfg, plan, params, batch_fn,
+                                           spec, key)
+    return joined, hist.to_lm_legacy()
+
+
+# Kept importable for external callers; the engine equivalents live in
+# repro.train.backends.LMBackend.
+def build_stage_step(cfg, plan, k, stage_sil, opt):
+    """Jitted train step for stage k of a transformer (legacy signature)."""
     last = k == plan.n_stages - 1
 
     @jax.jit
@@ -314,11 +218,7 @@ def build_stage_step(cfg, plan, k, stage_sil, opt):
 
 
 def build_prefix_forward(cfg, plan, k):
-    """Jitted frozen forward of stages < k (boundary producer).
-
-    This is the paper's sole inter-partition communication: the output of the
-    previously-trained partitions feeding the current one.
-    """
+    """Jitted frozen forward of stages < k (legacy signature)."""
     @jax.jit
     def fwd(prefix_params: tuple, batch):
         x = batch
@@ -327,139 +227,3 @@ def build_prefix_forward(cfg, plan, k):
                                            remat=False)
         return x
     return fwd
-
-
-def pnn_train_lm(cfg, plan, params, batch_fn: Callable[[int], dict],
-                 pnn: PNNLMConfig, key):
-    """Stage-sequential PNN training of a transformer LM.
-
-    batch_fn(step) -> {'tokens', 'labels', ...}.  Returns (joined params,
-    history).  Each stage holds ONLY its own params + optimizer state while
-    training (the paper's memory claim); earlier stages are frozen inputs.
-    """
-    stage_hps = pnn.stages or [PNNStageHP(steps=50)] * plan.n_stages
-    keys = jax.random.split(key, plan.n_stages)
-    sils = [sil_lib.make_sil(keys[k], cfg.d_model, cfg.vocab_size, pnn.kappa)
-            for k in range(plan.n_stages - 1)]
-
-    stage_params = [partition.slice_stage_params(cfg, plan, params, k)
-                    for k in range(plan.n_stages)]
-    hist = {"stage": [], "step": [], "loss": []}
-    step_idx = 0
-    for k in range(plan.n_stages):
-        hp = stage_hps[k]
-        opt = make_optimizer(hp.optimizer, hp.lr)
-        st = opt.init(stage_params[k])
-        stage_sil = sils[k] if k < plan.n_stages - 1 else None
-        step = build_stage_step(cfg, plan, k, stage_sil, opt)
-        prefix = build_prefix_forward(cfg, plan, k)
-        frozen = tuple(stage_params[:k])
-        for i in range(hp.steps):
-            batch = batch_fn(step_idx)
-            xin = batch if k == 0 else prefix(frozen, batch)
-            labels = batch["labels"]
-            mask = batch.get("mask")
-            stage_params[k], st, loss = step(stage_params[k], st, xin,
-                                             labels, mask)
-            hist["stage"].append(k)
-            hist["step"].append(step_idx)
-            hist["loss"].append(float(loss))
-            step_idx += 1
-
-    joined = partition.join_stage_params(cfg, plan, stage_params)
-
-    # recovery (§5): fine-tune stage 0 end-to-end with the rest frozen
-    # (see below)
-    if pnn.recovery_steps:
-        opt = make_optimizer("adamw", pnn.recovery_lr)
-        st = opt.init(stage_params[0])
-
-        @jax.jit
-        def rec_step(p0, st, batch):
-            def loss_fn(p0_):
-                x = batch
-                sp = [p0_] + [jax.lax.stop_gradient(s)
-                              for s in stage_params[1:]]
-                for j in range(plan.n_stages):
-                    x, aux = partition.stage_forward(cfg, plan, j, sp[j], x)
-                loss, _ = losses.train_objective(cfg, x, batch["labels"], aux,
-                                                 batch.get("mask"))
-                return loss
-            loss, grads = jax.value_and_grad(loss_fn)(p0)
-            p0, st2 = opt.update(grads, st, p0)
-            return p0, st2, loss
-
-        for i in range(pnn.recovery_steps):
-            batch = batch_fn(step_idx)
-            stage_params[0], st, loss = rec_step(stage_params[0], st, batch)
-            hist["stage"].append(-1)  # recovery
-            hist["step"].append(step_idx)
-            hist["loss"].append(float(loss))
-            step_idx += 1
-        joined = partition.join_stage_params(cfg, plan, stage_params)
-
-    return joined, hist
-
-
-def pnn_parallel_train_lm(cfg, plan, params, batch_fn: Callable[[int], dict],
-                          pnn: PNNLMConfig, key):
-    """Fig.-5 mode at transformer scale: ALL stages train simultaneously.
-
-    Interior stage k consumes synthetic inputs SIL_{k-1}[:, y_t] (broadcast
-    over positions) and regresses to SIL_k[:, y_t]; stage 0 consumes the real
-    batch; the last stage consumes SIL_{last-1}[:, y_t] and trains with CE.
-    Zero inter-stage dependencies — on the multi-pod mesh every pod trains
-    its stage concurrently with NO communication at all (the paper deems the
-    mode impractical for accuracy; implemented for completeness and measured
-    in examples/pnn_transformer.py --parallel).
-    """
-    stage_hps = pnn.stages or [PNNStageHP(steps=50)] * plan.n_stages
-    keys = jax.random.split(key, plan.n_stages)
-    sils = [sil_lib.make_sil(keys[k], cfg.d_model, cfg.vocab_size, pnn.kappa)
-            for k in range(plan.n_stages - 1)]
-
-    stage_params = [partition.slice_stage_params(cfg, plan, params, k)
-                    for k in range(plan.n_stages)]
-    opts = [make_optimizer(hp.optimizer, hp.lr) for hp in stage_hps]
-    states = [opts[k].init(stage_params[k]) for k in range(plan.n_stages)]
-
-    def make_step(k):
-        last = k == plan.n_stages - 1
-        opt = opts[k]
-
-        @jax.jit
-        def step(sp, st, xin, labels):
-            def loss_fn(p):
-                out, aux = partition.stage_forward(cfg, plan, k, p, xin)
-                if last:
-                    loss, _ = losses.train_objective(cfg, out, labels, aux)
-                    return loss
-                bound = out[0] if cfg.enc_dec else out
-                return losses.sil_stage_loss(bound, sils[k], labels)
-            loss, grads = jax.value_and_grad(loss_fn)(sp)
-            sp2, st2 = opt.update(grads, st, sp)
-            return sp2, st2, loss
-        return step
-
-    steps = [make_step(k) for k in range(plan.n_stages)]
-    hist = {"stage": [], "step": [], "loss": []}
-    n_steps = max(hp.steps for hp in stage_hps)
-    for i in range(n_steps):
-        batch = batch_fn(i)
-        labels = batch["labels"]
-        for k in range(plan.n_stages):
-            if i >= stage_hps[k].steps:
-                continue
-            if k == 0:
-                xin = batch
-            else:
-                syn = sil_lib.sil_lookup(sils[k - 1], labels).astype(
-                    cfg.activation_dtype())
-                xin = (syn, None) if cfg.enc_dec else syn
-            stage_params[k], states[k], loss = steps[k](
-                stage_params[k], states[k], xin, labels)
-            hist["stage"].append(k)
-            hist["step"].append(i)
-            hist["loss"].append(float(loss))
-
-    return partition.join_stage_params(cfg, plan, stage_params), hist

@@ -130,7 +130,8 @@ class Policy:
             return self._mamba_spec(path, shape, spec, is_bias)
         if "mlstm/" in path or "slstm/" in path:
             return self._xlstm_spec(path, shape, spec, is_bias)
-        if path == "tok_embed":
+        if path in ("tok_embed", "tied_unembed"):
+            # tied_unembed: the last PNN stage's frozen embedding snapshot
             return P(self._tp(cfg.vocab_padded, "vocab"),
                      self._fs(cfg.d_model))
         if path == "unembed":

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_NAMES, get
-from repro.core import partition, pnn
+from repro.core import partition
 from repro.data.lm import lm_batches, synthetic_token_stream
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import Policy
@@ -27,6 +27,7 @@ from repro.launch.steps import (build_train_step, pick_accum,
 from repro.configs.base import InputShape
 from repro.models import model as M
 from repro.optim import cosine_warmup, make_optimizer
+from repro.train import StageSpec, TrainSpec, recipes
 
 
 def main():
@@ -59,15 +60,36 @@ def main():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
     if args.mode == "pnn":
+        # PNN stage steps go through the SAME Policy/sharding plumbing as
+        # baseline training; on sub-mesh hosts --seq-shard fails loudly
+        # instead of being silently ignored (it used to be).
+        shard_fn, pspecs_fn = None, None
+        if use_mesh:
+            mesh = make_production_mesh()
+            policy = Policy(cfg, mesh)
+            if args.seq_shard:
+                shard_fn = _shard_x_fn(cfg, policy, args.batch, args.seq)
+            # NamedShardings (not bare PartitionSpecs): the stage steps are
+            # traced outside any `with mesh:` context
+            pspecs_fn = policy.params_shardings
+        elif args.seq_shard:
+            raise SystemExit(
+                "--seq-shard with --mode pnn requires the production mesh "
+                f"(>=256 devices; have {n_dev}). Run without --seq-shard "
+                "or on a full slice.")
         plan = partition.make_plan(cfg, args.stages)
-        pc = pnn.PNNLMConfig(
+        spec = TrainSpec(
             n_stages=args.stages, kappa=1.0,
-            stages=[pnn.PNNStageHP(steps=args.steps // args.stages,
-                                   lr=args.lr)] * args.stages,
-            recovery_steps=args.steps // 4, recovery_lr=args.lr / 10)
-        params, hist = pnn.pnn_train_lm(cfg, plan, params, next_batch, pc,
-                                        jax.random.PRNGKey(1))
-        print("PNN losses (tail):", [round(l, 3) for l in hist["loss"][-5:]])
+            stages=tuple(StageSpec(steps=args.steps // args.stages,
+                                   lr=args.lr, optimizer="adamw")
+                         for _ in range(args.stages)),
+            recovery=StageSpec(steps=args.steps // 4, lr=args.lr / 10,
+                               optimizer="adamw"))
+        params, hist = recipes.run_lm_sequential(
+            cfg, plan, params, next_batch, spec, jax.random.PRNGKey(1),
+            shard_x=shard_fn, grad_pspecs_fn=pspecs_fn)
+        losses_tail = hist.column("loss")[-5:]
+        print("PNN losses (tail):", [round(l, 3) for l in losses_tail])
     else:
         opt_name = pick_optimizer_name(cfg) if not args.smoke else "adamw"
         opt = make_optimizer(opt_name, cosine_warmup(args.lr, 10, args.steps))

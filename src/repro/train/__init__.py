@@ -1,0 +1,30 @@
+"""`repro.train` — the composable phase API for PNN training.
+
+One ``Trainer`` runs any sequence of phases over either model backend; the
+paper's schedules are the short phase lists in ``repro.train.recipes``.
+
+    from repro.train import (TrainSpec, StageSpec, Trainer, MLPBackend,
+                             LMBackend, recipes)
+
+    spec = TrainSpec(stages=(StageSpec(epochs=5, lr=0.01),
+                             StageSpec(epochs=160, lr=0.003)), kappa=10.0)
+    params, hist = recipes.run_mlp_fig3(cfg, data, spec, key)
+"""
+from repro.train import recipes
+from repro.train.backends import LMBackend, MLPBackend
+from repro.train.boundary import BoundaryCache
+from repro.train.history import History
+from repro.train.phases import (BaselinePhase, BoundaryMaterializePhase,
+                                FrozenPrefixPhase, ParallelSilPhase,
+                                RecoveryPhase, SilStagePhase)
+from repro.train.spec import (StageSpec, TrainSpec, spec_from_lm_config,
+                              spec_from_paper_hp)
+from repro.train.trainer import Trainer, TrainState
+
+__all__ = [
+    "recipes", "LMBackend", "MLPBackend", "BoundaryCache", "History",
+    "BaselinePhase", "BoundaryMaterializePhase", "FrozenPrefixPhase",
+    "ParallelSilPhase", "RecoveryPhase", "SilStagePhase",
+    "StageSpec", "TrainSpec", "spec_from_lm_config", "spec_from_paper_hp",
+    "Trainer", "TrainState",
+]

@@ -1,0 +1,471 @@
+"""Training backends for the phase API.
+
+A backend binds the phase engine to a model family and its data access
+pattern:
+
+* ``MLPBackend`` — the paper's fully-connected EMNIST experiment.  Dataset is
+  array-resident, so the inner loop is a single jitted ``jax.lax.scan`` over
+  the epoch's stacked batches: metrics stay device-resident and the host sees
+  one transfer per epoch instead of one blocking ``float(loss)`` per step.
+* ``LMBackend`` — the transformer generalization over a
+  ``partition.PartitionPlan``.  Batches come from a host ``batch_fn`` stream,
+  so steps run in a python loop, but losses are kept as device scalars and
+  fetched in one transfer at phase end, which keeps dispatch asynchronous.
+
+Both backends donate params + optimizer state into their jitted steps on
+accelerators (donation is a no-op on CPU, where JAX would only warn), and
+defensively copy shared leaves when slicing stages so donation can never
+invalidate a caller-held param tree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses, partition, sil as sil_lib
+from repro.models import mlp as MLP
+from repro.models import model as M
+from repro.optim import make_optimizer
+
+from repro.train.spec import StageSpec, TrainSpec
+
+
+def donate_argnums(*nums) -> Tuple[int, ...]:
+    """Buffer donation is unimplemented on CPU (JAX emits a warning and
+    ignores it); only request it where it exists."""
+    return nums if jax.default_backend() in ("gpu", "tpu") else ()
+
+
+def _copy_tree(tree):
+    return jax.tree_util.tree_map(jnp.copy, tree)
+
+
+def make_optimizer_for(hp: StageSpec):
+    kw = {"momentum": hp.momentum} if hp.optimizer == "sgdm" else {}
+    return make_optimizer(hp.optimizer, hp.lr, **kw)
+
+
+def scanned_epoch_fn(step):
+    """One jitted epoch: scan `step` over stacked batches, returning the
+    per-step losses as a device array (no per-step host sync)."""
+
+    def epoch(params, opt_state, batches):
+        def body(carry, batch):
+            p, s = carry
+            p, s, loss = step(p, s, *batch)
+            return (p, s), loss
+        (p, s), ls = jax.lax.scan(body, (params, opt_state), batches)
+        return p, s, ls
+
+    return jax.jit(epoch, donate_argnums=donate_argnums(0, 1))
+
+
+# ==========================================================================
+# MLP backend (paper §3-§5)
+# ==========================================================================
+
+def balanced_bounds(cfg: MLP.MLPConfig, n_stages: int
+                    ) -> Tuple[Tuple[int, int], ...]:
+    """Balanced contiguous layer split (the legacy fig-5 scheme)."""
+    base, rem = divmod(cfg.n_layers, n_stages)
+    bounds, s = [], 0
+    for k in range(n_stages):
+        e = s + base + (1 if k < rem else 0)
+        bounds.append((s, e))
+        s = e
+    return tuple(bounds)
+
+
+def mlp_default_bounds(cfg: MLP.MLPConfig, n_stages: int
+                       ) -> Tuple[Tuple[int, int], ...]:
+    """2 stages -> the paper's cut; otherwise balanced contiguous split."""
+    if n_stages == 2:
+        return ((0, cfg.cut), (cfg.cut, cfg.n_layers))
+    return balanced_bounds(cfg, n_stages)
+
+
+class MLPBackend:
+    kind = "mlp"
+
+    def __init__(self, cfg: MLP.MLPConfig, data, spec: TrainSpec,
+                 bounds: Optional[Sequence[Tuple[int, int]]] = None):
+        self.cfg = cfg
+        self.spec = spec
+        tx, ty, vx, vy = data
+        self._tx = jnp.asarray(tx)
+        self._ty = jnp.asarray(ty)
+        self._vx, self._vy = vx, vy
+        self.bounds = tuple(bounds) if bounds is not None \
+            else mlp_default_bounds(cfg, spec.n_stages)
+        self.n_stages = len(self.bounds)
+        bs = spec.batch_size
+        self.n_train = len(tx)
+        self.batches_per_epoch = self.n_train // bs
+        self.samples_per_epoch = self.batches_per_epoch * bs
+        self.dropped_per_epoch = self.n_train - self.samples_per_epoch
+        self._plain_epoch = None   # cached unshuffled epoch arrays
+
+    # -- params ------------------------------------------------------------
+
+    def split(self, params) -> List[list]:
+        return [_copy_tree(params[b0:b1]) for b0, b1 in self.bounds]
+
+    def join(self, stage_params) -> list:
+        return sum(stage_params, [])
+
+    @staticmethod
+    def trainable(stage_params):
+        return stage_params       # no frozen leaves in the MLP stages
+
+    def boundary_width(self, k: int) -> int:
+        return self.cfg.sizes[self.bounds[k][1]]
+
+    def make_sils(self, key, kappa: float) -> list:
+        """Legacy-compatible fig-5 scheme: split(key, n_stages + 2), sils
+        keyed from keys[1 + k].  (The fig-3 recipe derives its single SIL
+        differently for seed compatibility — see recipes.run_mlp_fig3.)"""
+        keys = jax.random.split(key, self.n_stages + 2)
+        return [sil_lib.make_sil(keys[1 + k], self.boundary_width(k),
+                                 self.cfg.n_classes, kappa)
+                for k in range(self.n_stages - 1)]
+
+    # -- macs --------------------------------------------------------------
+
+    def stage_macs(self, k: int) -> int:
+        b0, b1 = self.bounds[k]
+        return MLP.macs(self.cfg, b0, b1)
+
+    def full_macs(self) -> int:
+        return MLP.macs(self.cfg)
+
+    # -- data --------------------------------------------------------------
+
+    def epoch_arrays(self, seed: int, shuffle: bool):
+        """Stacked (nb, bs, ...) device arrays for one epoch, in the exact
+        order the legacy `_batches` generator produced."""
+        bs = self.spec.batch_size
+        nb = self.batches_per_epoch
+        n = self.samples_per_epoch
+        if not shuffle:
+            if self._plain_epoch is None:
+                self._plain_epoch = (
+                    self._tx[:n].reshape(nb, bs, -1),
+                    self._ty[:n].reshape(nb, bs))
+            return self._plain_epoch
+        order = np.arange(self.n_train)
+        np.random.RandomState(seed).shuffle(order)
+        idx = jnp.asarray(order[:n])
+        return (jnp.take(self._tx, idx, axis=0).reshape(nb, bs, -1),
+                jnp.take(self._ty, idx, axis=0).reshape(nb, bs))
+
+    def array_epoch_arrays(self, x, y, seed: int, shuffle: bool):
+        """Same batching over caller-supplied arrays (e.g. the materialized
+        boundary from a BoundaryCache)."""
+        bs = self.spec.batch_size
+        n = (len(x) // bs) * bs
+        nb = n // bs
+        x = jnp.asarray(x) if not isinstance(x, jax.Array) else x
+        y = jnp.asarray(y) if not isinstance(y, jax.Array) else y
+        if shuffle:
+            order = np.arange(len(x))
+            np.random.RandomState(seed).shuffle(order)
+            idx = jnp.asarray(order[:n])
+            return (jnp.take(x, idx, axis=0).reshape(nb, bs, -1),
+                    jnp.take(y, idx, axis=0).reshape(nb, bs))
+        return x[:n].reshape(nb, bs, -1), y[:n].reshape(nb, bs)
+
+    # -- step builders -----------------------------------------------------
+
+    def _range_forward(self, p, x, b0, b1):
+        return MLP.forward_range(self.cfg, p, x, b0, b1)
+
+    def build_sil_step(self, k: int, opt, sil):
+        b0, b1 = self.bounds[k]
+
+        def step(p, st, x, y):
+            def loss_fn(p_):
+                h = self._range_forward(p_, x, b0, b1)
+                return losses.sil_stage_loss(h, sil, y)
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p2, st2 = opt.update(grads, st, p)
+            return p2, st2, loss
+        return step
+
+    def build_ce_step(self, k: int, opt):
+        """CE through stage k alone (its input is the stage boundary)."""
+        b0, b1 = self.bounds[k]
+
+        def step(p, st, h, y):
+            def loss_fn(p_):
+                logits = self._range_forward(p_, h, b0, b1)
+                return losses.cross_entropy(logits, y)
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p2, st2 = opt.update(grads, st, p)
+            return p2, st2, loss
+        return step
+
+    def build_baseline_step(self, opt):
+        cfg = self.cfg
+
+        def step(p, st, x, y):
+            def loss_fn(p_):
+                logits = MLP.forward_range(cfg, p_, x, 0, cfg.n_layers)
+                return losses.cross_entropy(logits, y)
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p2, st2 = opt.update(grads, st, p)
+            return p2, st2, loss
+        return step
+
+    def build_recovery_step(self, j: int, frozen: list, opt):
+        """End-to-end CE training of stage j with every other stage frozen
+        (paper §5 for j=0)."""
+        bounds = self.bounds
+
+        def step(pj, st, x, y):
+            def loss_fn(pj_):
+                h = x
+                for k, (b0, b1) in enumerate(bounds):
+                    p = pj_ if k == j else jax.lax.stop_gradient(frozen[k])
+                    h = self._range_forward(p, h, b0, b1)
+                return losses.cross_entropy(h, y)
+            loss, grads = jax.value_and_grad(loss_fn)(pj)
+            pj2, st2 = opt.update(grads, st, pj)
+            return pj2, st2, loss
+        return step
+
+    def build_parallel_step(self, k: int, opt, sils):
+        """Fig.-5 stage step: interior stages consume SIL_{k-1}[:, y] and
+        regress to SIL_k[:, y]; the last trains with CE; stage 0 consumes
+        the real batch.  The synthetic input is looked up inside the jitted
+        step from the labels (identical math to the legacy host lookup)."""
+        b0, b1 = self.bounds[k]
+        last = k == self.n_stages - 1
+
+        def step(p, st, x, y):
+            def loss_fn(p_):
+                xin = x if k == 0 else sil_lib.sil_lookup(sils[k - 1], y)
+                h = self._range_forward(p_, xin, b0, b1)
+                if last:
+                    return losses.cross_entropy(h, y)
+                return losses.sil_stage_loss(h, sils[k], y)
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p2, st2 = opt.update(grads, st, p)
+            return p2, st2, loss
+        return step
+
+    # -- prefix / eval -----------------------------------------------------
+
+    def prefix_forward(self, k: int):
+        bounds = self.bounds
+        cfg = self.cfg
+
+        @jax.jit
+        def fwd(prefix: tuple, x):
+            for j in range(k):
+                b0, b1 = bounds[j]
+                x = MLP.forward_range(cfg, prefix[j], x, b0, b1)
+            return x
+        return fwd
+
+    def eval_joined(self, stage_params) -> float:
+        return self.eval_full(self.join(stage_params))
+
+    def eval_full(self, params) -> float:
+        return mlp_test_accuracy(self.cfg, params, self._vx, self._vy)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _mlp_eval(cfg: MLP.MLPConfig, params, x, y):
+    logits = MLP.forward_range(cfg, params, x, 0, cfg.n_layers)
+    return losses.accuracy(logits, y)
+
+
+def mlp_test_accuracy(cfg, params, tx, ty, bs=4096) -> float:
+    accs = []
+    for i in range(0, len(tx), bs):
+        accs.append(float(_mlp_eval(cfg, params, tx[i:i + bs], ty[i:i + bs]))
+                    * len(tx[i:i + bs]))
+    return sum(accs) / len(tx)
+
+
+# ==========================================================================
+# Transformer (PartitionPlan) backend
+# ==========================================================================
+
+class LMBackend:
+    kind = "lm"
+
+    def __init__(self, cfg, plan: partition.PartitionPlan,
+                 batch_fn: Callable[[int], dict], spec: TrainSpec, *,
+                 shard_x=None, grad_pspecs_fn=None):
+        """shard_x / grad_pspecs_fn: the production sharding hooks —
+        `launch/train.py` passes the Policy's sequence-shard constraint and
+        `policy.params_shardings` (NamedShardings, usable outside a mesh
+        context) so PNN stage steps run through the same plumbing as
+        baseline training."""
+        self.cfg = cfg
+        self.plan = plan
+        self.batch_fn = batch_fn
+        self.spec = spec
+        self.n_stages = plan.n_stages
+        self.shard_x = shard_x
+        self.grad_pspecs_fn = grad_pspecs_fn
+
+    # -- params ------------------------------------------------------------
+
+    def split(self, params) -> List[dict]:
+        # copy so donated stage buffers can never alias the caller's tree
+        return [_copy_tree(partition.slice_stage_params(
+            self.cfg, self.plan, params, k)) for k in range(self.n_stages)]
+
+    def join(self, stage_params) -> dict:
+        return partition.join_stage_params(self.cfg, self.plan, stage_params)
+
+    def make_sils(self, key, kappa: float) -> list:
+        # exact legacy key schedule: split(key, n_stages), sils from keys[:n-1]
+        keys = jax.random.split(key, self.n_stages)
+        return [sil_lib.make_sil(keys[k], self.cfg.d_model,
+                                 self.cfg.vocab_size, kappa)
+                for k in range(self.n_stages - 1)]
+
+    def before_stage_train(self, stage_params: list, k: int) -> None:
+        """Refresh the last stage's frozen tied-unembedding copy from stage
+        0's (possibly already trained) embedding before training it."""
+        if k == self.n_stages - 1:
+            partition.refresh_tied_unembed(self.cfg, self.plan, stage_params)
+
+    @staticmethod
+    def trainable(stage_params: dict) -> dict:
+        """The stage's differentiated/optimized subtree.  The frozen
+        ``tied_unembed`` snapshot is excluded so no gradient or optimizer
+        state is ever allocated for it (the paper's per-stage memory claim)."""
+        return {k: v for k, v in stage_params.items() if k != "tied_unembed"}
+
+    # -- step builders -----------------------------------------------------
+
+    def _trim_vision(self, x):
+        if self.cfg.frontend == "vision":
+            return x[:, self.cfg.vision_tokens:]
+        return x
+
+    def _jit_step(self, step):
+        return jax.jit(step, donate_argnums=donate_argnums(0, 1))
+
+    def _grad_pspecs(self, stage_params):
+        if self.grad_pspecs_fn is None:
+            return None
+        return self.grad_pspecs_fn(stage_params)
+
+    @staticmethod
+    def _split_frozen(sp: dict):
+        frozen = {k: v for k, v in sp.items() if k == "tied_unembed"}
+        train = {k: v for k, v in sp.items() if k != "tied_unembed"}
+        return train, frozen
+
+    def build_stage_step(self, k: int, opt, sil, stage_params_struct=None):
+        """Train step for stage k: SIL-MSE on the boundary for interior
+        stages, CE (+ MoE aux) through the real unembedding for the last.
+        The frozen tied_unembed snapshot (if any) is carried outside the
+        differentiated tree — zero grad/optimizer-state cost."""
+        cfg, plan = self.cfg, self.plan
+        last = k == self.n_stages - 1
+        pspecs = self._grad_pspecs(self.trainable(stage_params_struct)) \
+            if stage_params_struct is not None else None
+
+        def step(sp, st, xin, labels, mask=None):
+            train, frozen = self._split_frozen(sp)
+
+            def loss_fn(p):
+                out, aux = partition.stage_forward(cfg, plan, k,
+                                                   {**p, **frozen}, xin,
+                                                   shard_x=self.shard_x)
+                if last:
+                    loss, _ = losses.train_objective(
+                        cfg, self._trim_vision(out), labels, aux, mask)
+                    return loss
+                bound = out[0] if cfg.enc_dec else out
+                bound = self._trim_vision(bound)
+                loss = losses.sil_stage_loss(bound, sil, labels)
+                if cfg.moe is not None:
+                    loss = loss + cfg.moe.load_balance_loss * aux["lb_loss"] \
+                        + cfg.moe.router_z_loss * aux["z_loss"]
+                return loss
+            loss, grads = jax.value_and_grad(loss_fn)(train)
+            if pspecs is not None:
+                grads = jax.tree_util.tree_map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    grads, pspecs)
+            new_train, st2 = opt.update(grads, st, train)
+            return {**new_train, **frozen}, st2, loss
+
+        return self._jit_step(step)
+
+    def build_recovery_step(self, j: int, frozen_stages: list, opt):
+        """End-to-end CE training of stage j, all other stages frozen."""
+        cfg, plan = self.cfg, self.plan
+
+        def step(pj, st, batch):
+            train, snap = self._split_frozen(pj)
+
+            def loss_fn(pj_):
+                x = batch
+                aux = {}
+                for k in range(self.n_stages):
+                    p = {**pj_, **snap} if k == j \
+                        else jax.lax.stop_gradient(frozen_stages[k])
+                    x, aux = partition.stage_forward(cfg, plan, k, p, x,
+                                                     shard_x=self.shard_x)
+                loss, _ = losses.train_objective(
+                    cfg, self._trim_vision(x), batch["labels"], aux,
+                    batch.get("mask"))
+                return loss
+            loss, grads = jax.value_and_grad(loss_fn)(train)
+            new_train, st2 = opt.update(grads, st, train)
+            return {**new_train, **snap}, st2, loss
+
+        return self._jit_step(step)
+
+    def build_baseline_step(self, opt):
+        """Conventional end-to-end training of the UNPARTITIONED network
+        (full joined param tree through M.forward — tied embeddings train
+        with gradient flowing through the unembedding, exactly as outside
+        the phase API)."""
+        cfg = self.cfg
+
+        def step(params, st, batch):
+            def loss_fn(p):
+                logits, aux = M.forward(cfg, p, batch, shard_x=self.shard_x)
+                loss, _ = losses.train_objective(
+                    cfg, self._trim_vision(logits), batch["labels"], aux,
+                    batch.get("mask"))
+                return loss
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            p2, st2 = opt.update(grads, st, params)
+            return p2, st2, loss
+
+        return self._jit_step(step)
+
+    def prefix_forward(self, k: int):
+        """Jitted frozen forward of stages < k — the paper's sole
+        inter-partition communication."""
+        cfg, plan = self.cfg, self.plan
+
+        @jax.jit
+        def fwd(prefix_params: tuple, batch):
+            x = batch
+            for j in range(k):
+                x, _ = partition.stage_forward(cfg, plan, j, prefix_params[j],
+                                               x, remat=False,
+                                               shard_x=self.shard_x)
+            return x
+        return fwd
+
+    def synthetic_input(self, k: int, sils, labels):
+        """Fig.-5 synthetic input for stage k>0: SIL_{k-1}[:, y]."""
+        syn = sil_lib.sil_lookup(sils[k - 1], labels).astype(
+            self.cfg.activation_dtype())
+        return (syn, None) if self.cfg.enc_dec else syn

@@ -1,0 +1,95 @@
+"""BoundaryCache: storage for materialized partition-boundary activations.
+
+The paper's Fig.-3 schedule communicates between partitions exactly once: the
+trained prefix runs forward over the dataset and the boundary activations are
+stored for the suffix to train on.  The legacy implementation accumulated a
+python list of per-batch arrays and ``np.concatenate``-d them (a transient
+2x-memory spike and a full copy).  This cache instead reserves the
+destination buffer once and writes device-sized chunks into it as they are
+pulled from the accelerator; when the buffer would exceed
+``spill_threshold_bytes`` (or a ``spill_dir`` is forced) it is backed by an
+on-disk ``np.memmap`` so production-sized materializations don't need to fit
+in host RAM.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Optional, Tuple
+
+import numpy as np
+
+_DEFAULT_SPILL_THRESHOLD = 8 << 30  # 8 GiB
+
+
+class BoundaryCache:
+    """Chunk-filled (N, *feat) activation store with optional disk spill."""
+
+    def __init__(self, spill_dir: Optional[str] = None,
+                 spill_threshold_bytes: int = _DEFAULT_SPILL_THRESHOLD):
+        self.spill_dir = spill_dir
+        self.spill_threshold_bytes = spill_threshold_bytes
+        self._buf: Optional[np.ndarray] = None
+        self._path: Optional[str] = None
+        self._n_filled = 0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def reserve(self, n_rows: int, feat_shape: Tuple[int, ...], dtype) -> None:
+        """Allocate the destination once (RAM or memmap)."""
+        if self._buf is not None:
+            raise RuntimeError("BoundaryCache already reserved")
+        shape = (n_rows,) + tuple(feat_shape)
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        if self.spill_dir is not None or nbytes > self.spill_threshold_bytes:
+            d = self.spill_dir or tempfile.gettempdir()
+            os.makedirs(d, exist_ok=True)
+            fd, self._path = tempfile.mkstemp(suffix=".boundary.npy", dir=d)
+            os.close(fd)
+            self._buf = np.memmap(self._path, dtype=dtype, mode="w+",
+                                  shape=shape)
+        else:
+            self._buf = np.empty(shape, dtype=dtype)
+        self._n_filled = 0
+
+    def append(self, chunk) -> None:
+        """Write one device-sized chunk (host copy happens here, once)."""
+        chunk = np.asarray(chunk)
+        if self._buf is None:
+            raise RuntimeError("reserve() before append()")
+        n = len(chunk)
+        if self._n_filled + n > len(self._buf):
+            raise ValueError(
+                f"cache overflow: reserved {len(self._buf)} rows, "
+                f"got {self._n_filled + n}")
+        self._buf[self._n_filled:self._n_filled + n] = chunk
+        self._n_filled += n
+
+    # -- access ------------------------------------------------------------
+
+    @property
+    def n_rows(self) -> int:
+        return self._n_filled
+
+    @property
+    def spilled(self) -> bool:
+        return self._path is not None
+
+    @property
+    def nbytes(self) -> int:
+        return 0 if self._buf is None else self._buf.nbytes
+
+    def array(self) -> np.ndarray:
+        """The filled prefix of the reserved buffer (zero-copy view)."""
+        if self._buf is None:
+            raise RuntimeError("cache is empty")
+        return self._buf[: self._n_filled]
+
+    def close(self) -> None:
+        self._buf = None
+        if self._path is not None:
+            try:
+                os.unlink(self._path)
+            except OSError:
+                pass
+            self._path = None

@@ -1,0 +1,411 @@
+"""Composable training phases (the paper's schedule, decomposed).
+
+Each phase is a small dataclass with ``run(trainer, state)``; a training
+procedure is a *list* of phases executed in order over shared ``TrainState``:
+
+* ``BaselinePhase``            — conventional end-to-end training.
+* ``SilStagePhase``            — train one stage against its SIL targets
+                                 (paper Fig. 3 "left" phase; interior LM
+                                 stages consume the live frozen prefix).
+* ``BoundaryMaterializePhase`` — run the frozen prefix over the data once and
+                                 store the boundary (the paper's only
+                                 communication), into a ``BoundaryCache``.
+* ``FrozenPrefixPhase``        — train a stage on frozen-prefix inputs
+                                 (stored or live) with its natural loss (CE
+                                 for the last stage; Fig. 3 "right" phase).
+* ``RecoveryPhase``            — §5: fine-tune one stage end-to-end with the
+                                 others frozen.
+* ``ParallelSilPhase``         — Fig. 5: every stage trains simultaneously on
+                                 synthetic inputs/targets, zero dependencies.
+
+Per-phase ``lr`` / ``optimizer`` / duration default to the ``TrainSpec``'s
+per-stage entries; seeds (``seed_base``) reproduce the legacy trainers'
+epoch seeding so schedules are bit-for-bit comparable with the pre-redesign
+functions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.backends import make_optimizer_for, scanned_epoch_fn
+from repro.train.boundary import BoundaryCache
+from repro.train.spec import StageSpec
+
+
+@dataclass
+class PhaseBase:
+    # overrides; default to the TrainSpec's per-stage entries
+    epochs: Optional[int] = None
+    steps: Optional[int] = None
+    lr: Optional[float] = None
+    optimizer: Optional[str] = None
+    momentum: Optional[float] = None
+    seed_base: int = 0
+    needs_sil = False
+
+    def resolve(self, base: StageSpec) -> StageSpec:
+        return StageSpec(
+            epochs=self.epochs if self.epochs is not None else base.epochs,
+            steps=self.steps if self.steps is not None else base.steps,
+            lr=self.lr if self.lr is not None else base.lr,
+            optimizer=self.optimizer or base.optimizer,
+            momentum=self.momentum if self.momentum is not None
+            else base.momentum)
+
+
+# ==========================================================================
+
+@dataclass
+class BaselinePhase(PhaseBase):
+    """Conventional training of the unpartitioned network."""
+    name: str = "baseline"
+
+    def run(self, trainer, state) -> None:
+        be = trainer.backend
+        hp = self.resolve(trainer.spec.baseline or trainer.spec.stage(0))
+        opt = make_optimizer_for(hp)
+        if be.kind == "mlp":
+            params = be.join(state.stage_params)
+            opt_state = opt.init(params)
+            params, _ = trainer.drive_epochs(
+                state, step=be.build_baseline_step(opt), train_params=params,
+                opt_state=opt_state, epochs=hp.epochs, phase_name=self.name,
+                stage=-1, macs_per_sample=be.full_macs(),
+                seed_base=self.seed_base, log_mode="cadence+last",
+                eval_fn=be.eval_full)
+            state.stage_params = be.split(params)
+        else:
+            # true unpartitioned training: the full joined tree through
+            # M.forward (tied embeddings receive unembedding gradients)
+            params = be.join(state.stage_params)
+            step = be.build_baseline_step(opt)
+            opt_state = opt.init(params)
+
+            def inputs(i):
+                return (be.batch_fn(i),)
+            params, _ = trainer.drive_steps(
+                state, step=step, inputs_fn=inputs, n_steps=hp.steps,
+                phase_name=self.name, stage=-1,
+                train_params=params, opt_state=opt_state)
+            state.stage_params = be.split(params)
+
+
+# ==========================================================================
+
+@dataclass
+class SilStagePhase(PhaseBase):
+    """Train stage `stage` against its SIL table (paper's left phase).
+
+    MLP backend: stage 0 only (real inputs).  LM backend: any interior
+    stage; stages > 0 consume the live frozen prefix per step."""
+    stage: int = 0
+    name: str = "left"
+    needs_sil = True
+
+    def run(self, trainer, state) -> None:
+        be = trainer.backend
+        k = self.stage
+        if k >= be.n_stages - 1:
+            raise ValueError("SilStagePhase is for interior stages; the last "
+                             "stage trains with CE (FrozenPrefixPhase)")
+        hp = self.resolve(trainer.spec.stage(k))
+        opt = make_optimizer_for(hp)
+        sil = state.sils[k]
+        if be.kind == "mlp":
+            if k != 0:
+                raise ValueError("MLP SilStagePhase supports stage 0 only "
+                                 "(materialize the boundary for later stages)")
+            opt_state = opt.init(state.stage_params[k])
+            state.stage_params[k], _ = trainer.drive_epochs(
+                state, step=be.build_sil_step(k, opt, sil),
+                train_params=state.stage_params[k], opt_state=opt_state,
+                epochs=hp.epochs, phase_name=self.name, stage=k,
+                macs_per_sample=be.stage_macs(k), seed_base=self.seed_base,
+                log_mode="cadence")
+        else:
+            step = be.build_stage_step(k, opt, sil, state.stage_params[k])
+            opt_state = opt.init(be.trainable(state.stage_params[k]))
+            prefix = be.prefix_forward(k) if k else None
+            frozen = tuple(state.stage_params[:k])
+
+            def inputs(i):
+                batch = be.batch_fn(i)
+                xin = batch if k == 0 else prefix(frozen, batch)
+                return (xin, batch["labels"], batch.get("mask"))
+            state.stage_params[k], _ = trainer.drive_steps(
+                state, step=step, inputs_fn=inputs, n_steps=hp.steps,
+                phase_name=self.name, stage=k,
+                train_params=state.stage_params[k], opt_state=opt_state)
+
+
+# ==========================================================================
+
+@dataclass
+class BoundaryMaterializePhase(PhaseBase):
+    """Store the frozen prefix's boundary activations (stages < `upto`).
+
+    This is the paper's single inter-partition communication.  Activations
+    are pulled from the device in chunks straight into a reserved
+    ``BoundaryCache`` buffer (optionally memmap-spilled to `spill_dir`).
+    LM backend: captures `n_batches` batches from the stream (decoder-only
+    models)."""
+    upto: int = 1
+    spill_dir: Optional[str] = None
+    spill_threshold_bytes: Optional[int] = None
+    n_batches: Optional[int] = None    # LM backend only
+    name: str = "materialize"
+
+    def _cache(self) -> BoundaryCache:
+        kw = {}
+        if self.spill_threshold_bytes is not None:
+            kw["spill_threshold_bytes"] = self.spill_threshold_bytes
+        return BoundaryCache(spill_dir=self.spill_dir, **kw)
+
+    def run(self, trainer, state) -> None:
+        be = trainer.backend
+        fwd = be.prefix_forward(self.upto)
+        frozen = tuple(state.stage_params[: self.upto])
+        old = state.boundary.get("h")
+        if old is not None and hasattr(old, "close"):
+            old.close()   # re-materialization must not leak a spill file
+        cache = self._cache()
+        if be.kind == "mlp":
+            bx, by = be.epoch_arrays(seed=0, shuffle=False)
+            nb, bs = bx.shape[0], bx.shape[1]
+            cache.reserve(nb * bs, (be.boundary_width(self.upto - 1),),
+                          np.float32)
+            for i in range(nb):
+                cache.append(fwd(frozen, bx[i]))
+            labels = np.asarray(jax.device_get(by)).reshape(-1)
+            state.boundary = {"h": cache, "labels": labels}
+        else:
+            if be.cfg.enc_dec:
+                raise NotImplementedError(
+                    "boundary materialization for enc-dec payloads is not "
+                    "supported; use FrozenPrefixPhase(source='live')")
+            if not self.n_batches:
+                raise ValueError("LM materialization needs n_batches")
+            hs, labels, masks = None, [], []
+            for j in range(self.n_batches):
+                batch = be.batch_fn(state.step_idx + j)
+                h = fwd(frozen, batch)
+                if hs is None:
+                    b, s, d = h.shape
+                    cache.reserve(self.n_batches * b, (s, d),
+                                  np.dtype(be.cfg.activation_dtype()))
+                    hs = True
+                cache.append(h)
+                labels.append(np.asarray(batch["labels"]))
+                if batch.get("mask") is not None:
+                    masks.append(np.asarray(batch["mask"]))
+            state.boundary = {"h": cache,
+                              "labels": np.concatenate(labels),
+                              "mask": np.concatenate(masks) if masks
+                              else None,
+                              "batch_size": int(labels[0].shape[0])}
+
+
+# ==========================================================================
+
+@dataclass
+class FrozenPrefixPhase(PhaseBase):
+    """Train stage `stage` on frozen-prefix inputs with its natural loss
+    (CE if it is the last stage, SIL-MSE otherwise).
+
+    source='cache': inputs come from the materialized BoundaryCache (the
+    paper's Fig.-3 right phase — zero prefix compute during training).
+    source='live': the frozen prefix runs forward every step (the
+    transformer-sequential default, where data is a stream)."""
+    stage: int = 1
+    source: str = "cache"
+    name: str = "right"
+    seed_base: int = 100
+    # interior stages regress to their SIL table; the last stage does not,
+    # but SIL derivation is cheap, so be conservative (pass sils=[] to a
+    # Trainer.run that genuinely needs none)
+    needs_sil = True
+
+    def run(self, trainer, state) -> None:
+        be = trainer.backend
+        k = self.stage
+        last = k == be.n_stages - 1
+        if not last and not state.sils:
+            raise ValueError("interior FrozenPrefixPhase needs SIL tables: "
+                             "pass sils= or key= to Trainer.run")
+        hp = self.resolve(trainer.spec.stage(k))
+        opt = make_optimizer_for(hp)
+        if hasattr(be, "before_stage_train"):
+            be.before_stage_train(state.stage_params, k)
+        if be.kind == "mlp":
+            if self.source != "cache" or "h" not in state.boundary:
+                raise ValueError("MLP FrozenPrefixPhase needs a preceding "
+                                 "BoundaryMaterializePhase")
+            step = be.build_ce_step(k, opt) if last \
+                else be.build_sil_step(k, opt, state.sils[k])
+            h = jnp.asarray(state.boundary["h"].array())
+            y = jnp.asarray(state.boundary["labels"])
+
+            def batch_arrays(ep):
+                return be.array_epoch_arrays(h, y, self.seed_base + ep,
+                                             be.spec.shuffle)
+            opt_state = opt.init(state.stage_params[k])
+            state.stage_params[k], _ = trainer.drive_epochs(
+                state, step=step, train_params=state.stage_params[k],
+                opt_state=opt_state, epochs=hp.epochs, phase_name=self.name,
+                stage=k, macs_per_sample=be.stage_macs(k),
+                seed_base=self.seed_base, log_mode="cadence+last",
+                batch_arrays=batch_arrays)
+        else:
+            sil = None if last else state.sils[k]
+            step = be.build_stage_step(k, opt, sil, state.stage_params[k])
+            opt_state = opt.init(be.trainable(state.stage_params[k]))
+            if self.source == "cache":
+                if "h" not in state.boundary:
+                    raise ValueError("no materialized boundary; add a "
+                                     "BoundaryMaterializePhase first")
+                h = state.boundary["h"].array()
+                labels = state.boundary["labels"]
+                mask = state.boundary.get("mask")
+                b = state.boundary["batch_size"]
+                n_batches = len(h) // b
+
+                def inputs(i):
+                    j = (i % n_batches) * b
+                    m = None if mask is None else jnp.asarray(mask[j:j + b])
+                    return (jnp.asarray(h[j:j + b]),
+                            jnp.asarray(labels[j:j + b]), m)
+            else:
+                prefix = be.prefix_forward(k)
+                frozen = tuple(state.stage_params[:k])
+
+                def inputs(i):
+                    batch = be.batch_fn(i)
+                    return (prefix(frozen, batch), batch["labels"],
+                            batch.get("mask"))
+            state.stage_params[k], _ = trainer.drive_steps(
+                state, step=step, inputs_fn=inputs, n_steps=hp.steps,
+                phase_name=self.name, stage=k,
+                train_params=state.stage_params[k], opt_state=opt_state)
+
+
+# ==========================================================================
+
+@dataclass
+class RecoveryPhase(PhaseBase):
+    """§5 recovery: fine-tune stage `stage` end-to-end, the rest frozen."""
+    stage: int = 0
+    name: str = "recovery"
+    seed_base: int = 200
+
+    def run(self, trainer, state) -> None:
+        be = trainer.backend
+        j = self.stage
+        base = trainer.spec.recovery
+        if base is None and self.epochs is None and self.steps is None:
+            return   # recovery disabled in the spec and not forced here
+        hp = self.resolve(base or trainer.spec.stage(j))
+        n = hp.epochs if be.kind == "mlp" else hp.steps
+        if not n:
+            return
+        opt = make_optimizer_for(hp)
+        frozen = list(state.stage_params)
+        if be.kind == "mlp":
+            step = be.build_recovery_step(j, frozen, opt)
+            opt_state = opt.init(state.stage_params[j])
+            state.stage_params[j], _ = trainer.drive_epochs(
+                state, step=step, train_params=state.stage_params[j],
+                opt_state=opt_state, epochs=n, phase_name=self.name,
+                stage=j, macs_per_sample=be.full_macs(),
+                seed_base=self.seed_base, log_mode="every")
+        else:
+            step = be.build_recovery_step(j, frozen, opt)
+            opt_state = opt.init(be.trainable(state.stage_params[j]))
+
+            def inputs(i):
+                return (be.batch_fn(i),)
+            state.stage_params[j], _ = trainer.drive_steps(
+                state, step=step, inputs_fn=inputs, n_steps=n,
+                phase_name=self.name, stage=-1,   # legacy: recovery logs -1
+                train_params=state.stage_params[j], opt_state=opt_state)
+
+
+# ==========================================================================
+
+@dataclass
+class ParallelSilPhase(PhaseBase):
+    """Fig. 5: ALL stages train simultaneously with zero dependencies.
+
+    Interior stage k consumes SIL_{k-1}[:, y] and regresses to SIL_k[:, y];
+    stage 0 consumes real inputs; the last stage trains with CE.  The paper
+    deems the mode impractical for accuracy; it is the zero-communication
+    extreme of the schedule space."""
+    name: str = "parallel"
+    needs_sil = True
+    shuffle: bool = True           # legacy MLP fig-5 shuffles
+
+    def run(self, trainer, state) -> None:
+        be = trainer.backend
+        if be.kind == "mlp":
+            self._run_mlp(trainer, state)
+        else:
+            self._run_lm(trainer, state)
+
+    def _run_mlp(self, trainer, state) -> None:
+        be = trainer.backend
+        hps = [self.resolve(trainer.spec.stage(k))
+               for k in range(be.n_stages)]
+        opts = [make_optimizer_for(hp) for hp in hps]
+        opt_states = [opts[k].init(state.stage_params[k])
+                      for k in range(be.n_stages)]
+        epoch_fns = [scanned_epoch_fn(
+            be.build_parallel_step(k, opts[k], state.sils))
+            for k in range(be.n_stages)]
+        # epoch loop outside the stage loop: the (shuffled) epoch gather is
+        # done once per epoch, shared by every independent stage
+        for ep in range(max(hp.epochs for hp in hps)):
+            batches = be.epoch_arrays(self.seed_base + ep, self.shuffle)
+            n_samples = batches[0].shape[0] * batches[0].shape[1]
+            for k in range(be.n_stages):
+                if ep >= hps[k].epochs:
+                    continue
+                state.stage_params[k], opt_states[k], _ = epoch_fns[k](
+                    state.stage_params[k], opt_states[k], batches)
+                state.cum_macs += be.stage_macs(k) * n_samples
+        state.history.log(phase=self.name, stage=-1, step=state.step_idx,
+                          macs=state.cum_macs,
+                          acc=be.eval_joined(state.stage_params))
+
+    def _run_lm(self, trainer, state) -> None:
+        be = trainer.backend
+        hps = [self.resolve(trainer.spec.stage(k))
+               for k in range(be.n_stages)]
+        opts = [make_optimizer_for(hp) for hp in hps]
+        opt_states = [opts[k].init(be.trainable(state.stage_params[k]))
+                      for k in range(be.n_stages)]
+        steps = [be.build_stage_step(
+            k, opts[k],
+            None if k == be.n_stages - 1 else state.sils[k],
+            state.stage_params[k]) for k in range(be.n_stages)]
+        pending, logged_steps, logged_stages = [], [], []
+        n_steps = max(hp.steps for hp in hps)
+        for i in range(n_steps):
+            batch = be.batch_fn(i)
+            labels = batch["labels"]
+            for k in range(be.n_stages):
+                if i >= hps[k].steps:
+                    continue
+                xin = batch if k == 0 else be.synthetic_input(k, state.sils,
+                                                              labels)
+                state.stage_params[k], opt_states[k], loss = steps[k](
+                    state.stage_params[k], opt_states[k], xin, labels)
+                pending.append(loss)
+                logged_steps.append(i)
+                logged_stages.append(k)
+            state.step_idx += 1
+        trainer.flush_losses(state, pending, logged_steps, self.name,
+                             logged_stages)

@@ -1,0 +1,137 @@
+"""The paper's training procedures as phase lists.
+
+Each procedure that used to be a bespoke ~60-line trainer in
+``repro.core.pnn`` is now a short list over one ``Trainer``:
+
+    baseline   [BaselinePhase()]
+    Fig. 3     [SilStagePhase(0), BoundaryMaterializePhase(1),
+                FrozenPrefixPhase(1), RecoveryPhase(0)]
+    Fig. 5     [ParallelSilPhase()]
+    LM seq.    [SilStagePhase(k) for interior k] + [FrozenPrefixPhase(last,
+                source='live'), RecoveryPhase(0)]
+
+The ``run_*`` helpers additionally reproduce the legacy trainers' exact RNG
+key schedules (param init + SIL derivation), so histories are comparable
+seed-for-seed with the pre-redesign functions — that equivalence is pinned
+by tests/test_train_api.py.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.core import sil as sil_lib
+from repro.models import mlp as MLP
+from repro.train.backends import LMBackend, MLPBackend, balanced_bounds
+from repro.train.phases import (BaselinePhase, BoundaryMaterializePhase,
+                                FrozenPrefixPhase, ParallelSilPhase,
+                                RecoveryPhase, SilStagePhase)
+from repro.train.spec import TrainSpec
+from repro.train.trainer import Trainer
+
+
+# --------------------------------------------------------------------------
+# phase lists
+# --------------------------------------------------------------------------
+
+def baseline_phases() -> list:
+    return [BaselinePhase()]
+
+
+def fig3_phases(n_stages: int = 2) -> list:
+    """Paper Fig. 3 + §5: left-vs-SIL, one boundary materialization, right
+    on stored activations, recovery.  (n_stages=2 is the paper's setup.)"""
+    return [SilStagePhase(stage=0),
+            BoundaryMaterializePhase(upto=n_stages - 1),
+            FrozenPrefixPhase(stage=n_stages - 1, source="cache"),
+            RecoveryPhase(stage=0)]
+
+
+def fig5_phases() -> list:
+    return [ParallelSilPhase()]
+
+
+def lm_sequential_phases(n_stages: int, recovery: bool = True) -> list:
+    """Transformer stage-sequential PNN: interior stages vs SIL on the live
+    frozen prefix, last stage CE on the live frozen prefix, then §5."""
+    phases: list = [SilStagePhase(stage=k) for k in range(n_stages - 1)]
+    phases.append(FrozenPrefixPhase(stage=n_stages - 1, source="live"))
+    if recovery:
+        phases.append(RecoveryPhase(stage=0))
+    return phases
+
+
+# --------------------------------------------------------------------------
+# MLP entry points (legacy key schedules preserved)
+# --------------------------------------------------------------------------
+
+def run_mlp_baseline(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
+                     eval_every: int = 1):
+    spec = _with_eval(spec, eval_every)
+    backend = MLPBackend(cfg, data, spec)
+    params = MLP.init_params(cfg, key)
+    return Trainer(backend, spec).run(baseline_phases(), params=params)
+
+
+def run_mlp_fig3(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
+                 eval_every: int = 1):
+    """Fig. 3 (+ §5 recovery when spec.recovery has epochs).
+
+    Key schedule (legacy-exact): kp, ks = split(key); params from kp, the
+    single cut's SIL from ks."""
+    spec = _with_eval(spec, eval_every)
+    backend = MLPBackend(cfg, data, spec)
+    kp, ks = jax.random.split(
+        jax.random.PRNGKey(0) if key is None else key)
+    params = MLP.init_params(cfg, kp)
+    sil = sil_lib.make_sil(ks, backend.boundary_width(0), cfg.n_classes,
+                           spec.kappa)
+    return Trainer(backend, spec).run(fig3_phases(backend.n_stages),
+                                      params=params, sils=[sil])
+
+
+def run_mlp_fig5(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
+                 n_stages: int = 3):
+    """Fig. 5 all-parallel mode.  Key schedule (legacy-exact):
+    split(key, n_stages + 2); params from keys[0], SIL k from keys[1 + k]."""
+    backend = MLPBackend(cfg, data, spec,
+                         bounds=balanced_bounds(cfg, n_stages))
+    keys = jax.random.split(key, n_stages + 2)
+    params = MLP.init_params(cfg, keys[0])
+    sils = [sil_lib.make_sil(keys[1 + k], backend.boundary_width(k),
+                             cfg.n_classes, spec.kappa)
+            for k in range(n_stages - 1)]
+    return Trainer(backend, spec).run(fig5_phases(), params=params,
+                                      sils=sils)
+
+
+def _with_eval(spec: TrainSpec, eval_every: int) -> TrainSpec:
+    from dataclasses import replace
+    return replace(spec, eval_every=eval_every)
+
+
+# --------------------------------------------------------------------------
+# transformer entry points
+# --------------------------------------------------------------------------
+
+def run_lm_sequential(cfg, plan, params, batch_fn: Callable[[int], dict],
+                      spec: TrainSpec, key, *, shard_x=None,
+                      grad_pspecs_fn=None):
+    """Stage-sequential PNN over a PartitionPlan (legacy pnn_train_lm)."""
+    backend = LMBackend(cfg, plan, batch_fn, spec, shard_x=shard_x,
+                        grad_pspecs_fn=grad_pspecs_fn)
+    recovery = bool(spec.recovery and spec.recovery.steps)
+    return Trainer(backend, spec).run(
+        lm_sequential_phases(plan.n_stages, recovery=recovery),
+        params=params, key=key)
+
+
+def run_lm_parallel(cfg, plan, params, batch_fn: Callable[[int], dict],
+                    spec: TrainSpec, key, *, shard_x=None,
+                    grad_pspecs_fn=None):
+    """Fig.-5 all-parallel mode at transformer scale."""
+    backend = LMBackend(cfg, plan, batch_fn, spec, shard_x=shard_x,
+                        grad_pspecs_fn=grad_pspecs_fn)
+    return Trainer(backend, spec).run([ParallelSilPhase()], params=params,
+                                      key=key)

@@ -1,0 +1,98 @@
+"""Stage-aware training configuration for the `repro.train` phase API.
+
+``TrainSpec`` is the single config that replaces the three legacy dataclasses
+(`PaperHP` for the MLP reproduction, `PNNLMConfig`/`PNNStageHP` for the
+transformer generalization): one spec carries per-stage optimizer / learning
+rate / duration plus the SIL and batching knobs shared by every phase.
+
+Durations are expressed in whichever unit the backend natively consumes —
+**epochs** for the dataset-backed MLP backend, **steps** for the stream-backed
+LM backend; a ``StageSpec`` may set either (or both, when the same spec is
+reused across backends).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class StageSpec:
+    """Hyperparameters of one partition stage (paper §2.1: per-partition
+    hyperparameters are a core advantage of the scheme)."""
+    epochs: int = 0            # MLP backend duration
+    steps: int = 0             # LM backend duration
+    lr: float = 1e-2
+    optimizer: str = "sgdm"
+    momentum: float = 0.9      # sgdm only
+
+
+@dataclass(frozen=True)
+class TrainSpec:
+    """One stage-aware config for every PNN training schedule.
+
+    ``stages[k]`` configures partition k.  ``recovery_*`` configures the §5
+    recovery phase (stage 0 fine-tuned end-to-end, the rest frozen).
+    ``baseline`` (a StageSpec) configures conventional end-to-end training.
+    """
+    n_stages: int = 2
+    kappa: float = 10.0
+    stages: Tuple[StageSpec, ...] = ()
+    baseline: Optional[StageSpec] = None
+    recovery: Optional[StageSpec] = None
+    # data / batching (MLP backend; the LM backend receives batches from a
+    # caller-supplied batch_fn and ignores these)
+    batch_size: int = 1410
+    shuffle: bool = False
+    eval_every: int = 1
+
+    def stage(self, k: int) -> StageSpec:
+        if self.stages and k < len(self.stages):
+            return self.stages[k]
+        return StageSpec()
+
+    def with_stages(self, *stages: StageSpec) -> "TrainSpec":
+        return replace(self, stages=tuple(stages), n_stages=len(stages))
+
+
+# --------------------------------------------------------------------------
+# conversions from the legacy configs (kept so callers can migrate piecemeal)
+# --------------------------------------------------------------------------
+
+def spec_from_paper_hp(hp) -> TrainSpec:
+    """`repro.core.pnn.PaperHP` -> TrainSpec (MLP backend, 2 stages)."""
+    lr_right = hp.lr_right if hp.lr_right is not None else hp.lr
+    rec_lr = hp.lr_recovery if hp.lr_recovery is not None else lr_right / 10.0
+    return TrainSpec(
+        n_stages=2,
+        kappa=hp.kappa,
+        stages=(
+            StageSpec(epochs=hp.n_left, lr=hp.lr, optimizer="sgdm",
+                      momentum=hp.momentum),
+            StageSpec(epochs=hp.n_right, lr=lr_right, optimizer="sgdm",
+                      momentum=hp.momentum),
+        ),
+        baseline=StageSpec(epochs=hp.n_baseline, lr=hp.lr, optimizer="sgdm",
+                           momentum=hp.momentum),
+        recovery=StageSpec(epochs=hp.n_recovery, lr=rec_lr, optimizer="sgdm",
+                           momentum=hp.momentum),
+        batch_size=hp.batch_size,
+        shuffle=hp.shuffle,
+    )
+
+
+def spec_from_lm_config(pnn_cfg, n_stages: Optional[int] = None) -> TrainSpec:
+    """`repro.core.pnn.PNNLMConfig` -> TrainSpec (LM backend)."""
+    n = n_stages or pnn_cfg.n_stages
+    stage_hps = pnn_cfg.stages or [None] * n
+    stages = []
+    for hp in stage_hps:
+        if hp is None:
+            stages.append(StageSpec(steps=50, lr=1e-3, optimizer="adamw"))
+        else:
+            stages.append(StageSpec(steps=hp.steps, lr=hp.lr,
+                                    optimizer=hp.optimizer))
+    recovery = StageSpec(steps=pnn_cfg.recovery_steps, lr=pnn_cfg.recovery_lr,
+                         optimizer="adamw") if pnn_cfg.recovery_steps else None
+    return TrainSpec(n_stages=n, kappa=pnn_cfg.kappa, stages=tuple(stages),
+                     recovery=recovery)

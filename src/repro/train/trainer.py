@@ -1,0 +1,143 @@
+"""The phase-sequence Trainer.
+
+``Trainer(backend, spec).run(phases, params=...)`` executes a list of
+``repro.train.phases`` objects over shared mutable ``TrainState`` and returns
+the joined parameters plus a unified ``History``.  Every legacy trainer is a
+short phase list (see ``repro.train.recipes``):
+
+    Fig. 3     [SilStagePhase(0), BoundaryMaterializePhase(1),
+                FrozenPrefixPhase(1), RecoveryPhase(0)]
+    baseline   [BaselinePhase()]
+    Fig. 5     [ParallelSilPhase()]
+
+The loop drivers here implement the perf contract: the MLP backend's epochs
+run as one jitted ``lax.scan`` per epoch (device-resident losses, donated
+carry), and the LM backend's step loop never blocks on a loss — device
+scalars are collected and fetched in a single transfer when the phase ends.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.backends import scanned_epoch_fn
+from repro.train.history import History
+
+
+@dataclass
+class TrainState:
+    stage_params: List[Any]
+    sils: List[Any] = field(default_factory=list)
+    history: History = field(default_factory=History)
+    boundary: Dict[str, Any] = field(default_factory=dict)
+    cum_macs: int = 0
+    step_idx: int = 0          # global LM optimizer-step counter (batch_fn arg)
+
+
+class Trainer:
+    """Runs any phase sequence over an MLP or transformer backend."""
+
+    def __init__(self, backend, spec):
+        self.backend = backend
+        self.spec = spec
+
+    def run(self, phases: Sequence, *, params, sils: Optional[list] = None,
+            key=None):
+        """Execute `phases` starting from full `params`.
+
+        `sils`: per-cut SIL tables; derived from `key` via the backend's
+        legacy-compatible schedule when omitted and any phase needs them.
+        Returns (joined_params, History).
+        """
+        needs_sil = any(getattr(p, "needs_sil", False) for p in phases)
+        if sils is None and needs_sil:
+            if key is None:
+                raise ValueError("phases need SIL tables: pass sils= or key=")
+            sils = self.backend.make_sils(key, self.spec.kappa)
+        state = TrainState(stage_params=self.backend.split(params),
+                           sils=sils or [])
+        if getattr(self.backend, "dropped_per_epoch", 0):
+            # tail-drop is silent no more: surface it in every history
+            state.history.meta["dropped_per_epoch"] = \
+                self.backend.dropped_per_epoch
+        for phase in phases:
+            phase.run(self, state)
+        for cache in state.boundary.values():
+            if hasattr(cache, "close"):
+                cache.close()
+        return self.backend.join(state.stage_params), state.history
+
+    # ------------------------------------------------------------------
+    # loop drivers (used by the phases)
+    # ------------------------------------------------------------------
+
+    def drive_epochs(self, state: TrainState, *, step, train_params,
+                     opt_state, epochs: int, phase_name: str, stage: int,
+                     macs_per_sample: int, seed_base: int, log_mode: str,
+                     eval_fn=None, batch_arrays=None,
+                     shuffle: Optional[bool] = None):
+        """MLP driver: one jitted scan per epoch over stacked batches.
+
+        batch_arrays(ep) -> tuple of (nb, bs, ...) arrays; defaults to the
+        backend dataset.  eval_fn(train_params) -> joined-network accuracy
+        (the paper's y-axis); defaults to substituting the in-flight stage
+        into the current stage list.  log_mode: 'cadence' | 'cadence+last'
+        | 'every' (the three cadences the legacy trainers used)."""
+        be = self.backend
+        shuffle = be.spec.shuffle if shuffle is None else shuffle
+        if batch_arrays is None:
+            def batch_arrays(ep):
+                return be.epoch_arrays(seed_base + ep, shuffle)
+        if eval_fn is None:
+            def eval_fn(tp):
+                sp = list(state.stage_params)
+                sp[stage] = tp
+                return be.eval_joined(sp)
+        epoch_fn = scanned_epoch_fn(step)
+        eval_every = be.spec.eval_every
+        for ep in range(epochs):
+            batches = batch_arrays(ep)
+            train_params, opt_state, _ = epoch_fn(train_params, opt_state,
+                                                  batches)
+            n_samples = batches[0].shape[0] * batches[0].shape[1]
+            state.cum_macs += macs_per_sample * n_samples
+            log = (log_mode == "every"
+                   or (ep + 1) % eval_every == 0
+                   or (log_mode == "cadence+last" and ep == epochs - 1))
+            if log:
+                state.history.log(phase=phase_name, stage=stage,
+                                  step=state.step_idx, macs=state.cum_macs,
+                                  acc=eval_fn(train_params))
+        return train_params, opt_state
+
+    def drive_steps(self, state: TrainState, *, step, inputs_fn,
+                    n_steps: int, phase_name: str, stage: int,
+                    train_params, opt_state, advance_global: bool = True):
+        """LM driver: python step loop, losses collected as device scalars
+        and fetched in ONE transfer at the end (async dispatch preserved)."""
+        pending, steps_logged = [], []
+        for _ in range(n_steps):
+            args = inputs_fn(state.step_idx)
+            train_params, opt_state, loss = step(train_params, opt_state,
+                                                 *args)
+            pending.append(loss)
+            steps_logged.append(state.step_idx)
+            if advance_global:
+                state.step_idx += 1
+        self.flush_losses(state, pending, steps_logged, phase_name, stage)
+        return train_params, opt_state
+
+    def flush_losses(self, state: TrainState, pending: list,
+                     steps_logged: list, phase_name, stage) -> None:
+        """One device->host transfer for a whole phase's loss curve."""
+        if not pending:
+            return
+        values = jax.device_get(jnp.stack(pending))
+        stages = stage if isinstance(stage, list) else [stage] * len(pending)
+        names = phase_name if isinstance(phase_name, list) \
+            else [phase_name] * len(pending)
+        for name, st, i, v in zip(names, stages, steps_logged, values):
+            state.history.log(phase=name, stage=st, step=i, loss=float(v))

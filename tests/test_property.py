@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dep; skip, don't error
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import partition, sil as sil_lib
 from repro.core.losses import cross_entropy
