@@ -1,11 +1,13 @@
-"""Serve a small model with batched requests: prefill + greedy decode.
+"""Serve paper partitions as deployable stages via the `repro.serve` API.
 
-Demonstrates the serving substrate (KV/state caches, ring-buffered sliding
-window, batched decode) that the decode_32k / long_500k dry-run shapes
-exercise at production scale.
+Demonstrates what the old script-level loops could not express: one
+`Engine.generate` call over MIXED-LENGTH prompts with per-request sampling
+configs, continuously batched into a slot pool — first against the joined
+model, then against the same weights split by a 2-stage `PartitionPlan`
+and served without joining (token-identical at temperature 0).
 
 Run:  PYTHONPATH=src python examples/serve_partitioned.py
-      [--arch xlstm-125m] [--new-tokens 32] [--batch 4] [--window 0]
+      [--arch qwen2-1.5b] [--new-tokens 16] [--slots 2] [--window 0]
 """
 import argparse
 import sys
@@ -14,81 +16,65 @@ import time
 sys.path.insert(0, "src")
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import get  # noqa: E402
+from repro.core import partition  # noqa: E402
 from repro.data.lm import synthetic_token_stream  # noqa: E402
-from repro.launch.steps import build_decode_step, build_prefill_step  # noqa: E402
 from repro.models import model as M  # noqa: E402
+from repro.serve import Engine, GenerationConfig, Request  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--window", type=int, default=0,
                     help=">0 enables the ring-buffered sliding window")
-    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = get(args.arch, smoke=True)
     if args.window:
         cfg = cfg.replace(sliding_window=args.window)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    stream = synthetic_token_stream(4096, cfg.vocab_size, seed=0)
 
-    stream = synthetic_token_stream(args.batch * args.prompt_len + 1,
-                                    cfg.vocab_size, seed=0)
-    prompts = jnp.asarray(
-        stream[: args.batch * args.prompt_len].reshape(args.batch, -1))
-    batch = {"tokens": prompts}
-    if cfg.enc_dec:
-        batch["frames"] = jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model))
-    if cfg.frontend == "vision":
-        batch["image_embeds"] = jnp.zeros(
-            (args.batch, cfg.vision_tokens, cfg.d_model))
+    # mixed-length prompts, heterogeneous per-request configs
+    requests = [
+        Request(tokens=stream[:48], id="long-greedy",
+                gen=GenerationConfig(max_new_tokens=args.new_tokens)),
+        Request(tokens=stream[100:116], id="short-greedy",
+                gen=GenerationConfig(max_new_tokens=args.new_tokens)),
+        Request(tokens=stream[200:232], id="sampled",
+                gen=GenerationConfig(max_new_tokens=args.new_tokens,
+                                     temperature=0.8, top_k=40, top_p=0.95,
+                                     seed=7)),
+        Request(tokens=stream[300:308], id="tiny",
+                gen=GenerationConfig(max_new_tokens=4)),
+    ]
 
-    cache_len = args.prompt_len + args.new_tokens \
-        + (cfg.vision_tokens if cfg.frontend == "vision" else 0)
-    prefill = jax.jit(build_prefill_step(cfg, cache_len=cache_len))
-    decode = jax.jit(build_decode_step(cfg))
-
+    joined = Engine(cfg, params, max_slots=args.slots)
     t0 = time.perf_counter()
-    logits, cache, pos = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
+    outs = joined.generate(requests)
+    dt = time.perf_counter() - t0
+    n = sum(c.n_generated for c in outs)
+    print(f"joined engine: {n} tokens in {dt*1e3:.0f}ms "
+          f"({n/dt:.0f} tok/s, slots={args.slots}, "
+          f"window={cfg.sliding_window or 'full'})")
+    for c in outs:
+        print(f"  {c.id}: prompt[{c.n_prompt}] -> "
+              f"{list(c.tokens[:10])}{'...' if c.n_generated > 10 else ''} "
+              f"[{c.finish_reason}]")
 
-    def sample(lg, key):
-        lg = lg[:, : cfg.vocab_size]
-        if args.temperature <= 0:
-            return jnp.argmax(lg, -1).astype(jnp.int32)
-        return jax.random.categorical(key, lg / args.temperature, -1) \
-            .astype(jnp.int32)
-
-    key = jax.random.PRNGKey(7)
-    tok = sample(logits, key)
-    out = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.new_tokens - 1):
-        key, sk = jax.random.split(key)
-        logits, cache = decode(params, cache, tok, pos + i)
-        tok = sample(logits, sk)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    gen = jnp.stack(out, axis=1)
-    ptoks = args.batch * args.prompt_len
-    dtoks = args.batch * (args.new_tokens - 1)
-    print(f"arch={cfg.name} (reduced)  window={cfg.sliding_window or 'full'}")
-    print(f"prefill: {ptoks} tokens in {t_prefill*1e3:.0f}ms "
-          f"({ptoks/t_prefill:.0f} tok/s)")
-    print(f"decode : {dtoks} tokens in {t_decode*1e3:.0f}ms "
-          f"({dtoks/max(t_decode,1e-9):.0f} tok/s)")
-    for b in range(min(args.batch, 2)):
-        print(f"request {b}: ...{prompts[b, -8:].tolist()} -> "
-              f"{gen[b, :12].tolist()}...")
+    # the same weights, partitioned into 2 deployable stages, never joined
+    plan = partition.make_plan(cfg, 2)
+    stage_params = [partition.slice_stage_params(cfg, plan, params, k)
+                    for k in range(plan.n_stages)]
+    staged = Engine(cfg, plan=plan, stage_params=stage_params,
+                    max_slots=args.slots)
+    outs2 = staged.generate(requests)
+    print("staged engine (2 stages): token-identical per request =",
+          [a.tokens == b.tokens for a, b in zip(outs, outs2)])
 
 
 if __name__ == "__main__":

@@ -6,15 +6,25 @@ aligned with sample order; we instead key SIL by label id (order-free), but
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import numpy as np
 
 
 class Batches:
+    """Epoch iterator over aligned arrays.
+
+    Per-epoch shuffle streams are drawn from a ``np.random.SeedSequence``
+    spawned per (seed, epoch), so distinct (seed, epoch) pairs never collide
+    (the old ``RandomState(seed + epoch)`` scheme made ``seed=0, epoch=1``
+    and ``seed=1, epoch=0`` identical).  ``legacy_seeding=True`` pins the old
+    behavior for bit-exact reproduction of pre-existing runs.
+    """
+
     def __init__(self, arrays, batch_size: int, *, shuffle: bool = True,
-                 seed: int = 0, drop_last: bool = True, sharding=None):
+                 seed: int = 0, drop_last: bool = True, sharding=None,
+                 legacy_seeding: bool = False):
         self.arrays = [np.asarray(a) for a in arrays]
         self.n = len(self.arrays[0])
         assert all(len(a) == self.n for a in self.arrays)
@@ -23,6 +33,7 @@ class Batches:
         self.seed = seed
         self.drop_last = drop_last
         self.sharding = sharding
+        self.legacy_seeding = legacy_seeding
 
     def __len__(self):
         return self.n // self.batch_size if self.drop_last else \
@@ -31,7 +42,12 @@ class Batches:
     def epoch(self, epoch_idx: int = 0) -> Iterator:
         order = np.arange(self.n)
         if self.shuffle:
-            np.random.RandomState(self.seed + epoch_idx).shuffle(order)
+            if self.legacy_seeding:
+                np.random.RandomState(self.seed + epoch_idx).shuffle(order)
+            else:
+                seq = np.random.SeedSequence(self.seed,
+                                             spawn_key=(epoch_idx,))
+                np.random.default_rng(seq).shuffle(order)
         stop = self.n - (self.n % self.batch_size) if self.drop_last else self.n
         for i in range(0, stop, self.batch_size):
             idx = order[i:i + self.batch_size]

@@ -9,6 +9,12 @@ assigned archs is 64..384 so a (128, D) tile is <= 192 KiB).
 GQA is handled in the index map: query head h reads KV head h // (H // KV) —
 KV is never materialized per-Q-head.  Validated against ref.py in
 interpret mode (tests/test_kernels.py sweeps shapes and dtypes).
+
+``decode_attention_tpu`` is the single-token serving variant: grid
+(batch, kv_head, Lc/BK), one program per KV head attending all of its G
+query heads at once (the (G, D) q tile rides along the whole cache sweep),
+with the per-request position vector prefetched into SMEM so ragged
+continuous batches mask their own history.
 """
 from __future__ import annotations
 
@@ -118,3 +124,93 @@ def flash_attention_tpu(q, k, v, *, causal=True, window=0, bq=DEFAULT_BQ,
     )(qt, kt, vt)
     out = out[:, :, :sq]
     return out.transpose(0, 2, 1, 3)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale, bk, lc):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, BK)
+
+    # valid slots: arange(lc) <= pos (ring caches: every written slot is
+    # valid once pos >= lc — same contract as ref.decode_attention)
+    slot = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (slot < lc) & (slot <= pos_ref[0])
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention_tpu(q, k_cache, v_cache, pos, *, window=0,
+                         bk=DEFAULT_BK, interpret=None):
+    """Single-token decode over a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, H, D); caches: (B, Lc, KV, D); pos: scalar int32 or per-request
+    (B,) vector.  `window` only affects the cache LAYOUT (ring), not the
+    validity mask, so it is accepted for signature parity with the ref.
+    Returns (B, 1, H, D).
+    """
+    b, _, h, d = q.shape
+    lc, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    qt = q[:, 0].reshape(b, kv, g, d)                    # (B, KV, G, D)
+    kt = k_cache.transpose(0, 2, 1, 3)                   # (B, KV, Lc, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    bk_ = min(bk, lc)
+    pad = (-lc) % bk_
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = kt.shape[2] // bk_
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk_, lc=lc)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, kv_, ik: (b_,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, kv_, ik: (b_, kv_, 0, 0)),
+            pl.BlockSpec((1, 1, bk_, d), lambda b_, kv_, ik: (b_, kv_, ik, 0)),
+            pl.BlockSpec((1, 1, bk_, d), lambda b_, kv_, ik: (b_, kv_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, kv_, ik: (b_, kv_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),       # m
+            pltpu.VMEM((g,), jnp.float32),       # l
+            pltpu.VMEM((g, d), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(pos_b, qt, kt, vt)
+    return out.reshape(b, 1, h, d)

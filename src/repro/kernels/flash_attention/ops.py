@@ -1,9 +1,14 @@
 """Dispatching wrapper: Pallas flash attention on TPU, chunked-jnp elsewhere.
 
-The dry-run lowers on the CPU backend (512 host devices), where pallas_call has
-no lowering path — so model code always goes through this wrapper.
+The dry-run lowers on the CPU backend (512 host devices), where pallas_call
+has no lowering path — so model code always goes through this wrapper.  Both
+the training/prefill path and the single-token decode path dispatch the same
+way; ``REPRO_FORCE_REF=1`` pins the reference implementation even on TPU so
+the serving engine is testable against both.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -17,9 +22,13 @@ def _on_tpu() -> bool:
         return False
 
 
+def _force_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "") == "1"
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, chunk=512):
     """Training/prefill attention. q:(B,S,H,D) k,v:(B,S,KV,D)."""
-    if _on_tpu():
+    if _on_tpu() and not _force_ref():
         from .kernel import flash_attention_tpu
         return flash_attention_tpu(q, k, v, causal=causal, window=window)
     return ref.chunked_attention(q, k, v, causal=causal, window=window, chunk=chunk)
@@ -27,4 +36,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, chunk=512):
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=0):
     """Single-token decode over a KV cache (ring-buffered if window>0)."""
+    if _on_tpu() and not _force_ref():
+        from .kernel import decode_attention_tpu
+        return decode_attention_tpu(q, k_cache, v_cache, pos, window=window)
     return ref.decode_attention(q, k_cache, v_cache, pos, window=window)

@@ -1,8 +1,13 @@
-"""Production serving launcher: batched prefill + decode loop.
+"""Production serving launcher: thin CLI over ``repro.serve.Engine``.
+
+All batching, cache, sampling, and decode-loop logic lives in
+``repro.serve``; this file only parses arguments, builds synthetic
+requests, and prints throughput.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-      --batch 4 --prompt-len 64 --new-tokens 32 [--window 256]
+      --batch 4 --prompt-len 64 --new-tokens 32 [--window 256] \
+      [--slots 4] [--stages 2] [--temperature 0.8 --top-k 40 --top-p 0.95]
 """
 from __future__ import annotations
 
@@ -10,12 +15,36 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get
+from repro.core import partition
 from repro.data.lm import synthetic_token_stream
-from repro.launch.steps import build_decode_step, build_prefill_step
 from repro.models import model as M
+from repro.serve import Engine, GenerationConfig, Request
+
+
+def build_engine(cfg, args):
+    """Engine in joined or PartitionPlan-staged mode (--stages > 1)."""
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    if args.stages > 1:
+        plan = partition.make_plan(cfg, args.stages)
+        stage_params = [partition.slice_stage_params(cfg, plan, params, k)
+                        for k in range(plan.n_stages)]
+        return Engine(cfg, plan=plan, stage_params=stage_params,
+                      max_slots=args.slots, decode_block=args.decode_block)
+    return Engine(cfg, params, max_slots=args.slots,
+                  decode_block=args.decode_block)
+
+
+def synthetic_requests(cfg, args) -> list:
+    stream = synthetic_token_stream(args.batch * args.prompt_len + 1,
+                                    cfg.vocab_size, seed=0)
+    prompts = stream[: args.batch * args.prompt_len].reshape(args.batch, -1)
+    gen = GenerationConfig(max_new_tokens=args.new_tokens,
+                           temperature=args.temperature, top_k=args.top_k,
+                           top_p=args.top_p)
+    return [Request(tokens=prompts[i], gen=gen, id=f"req-{i}")
+            for i in range(args.batch)]
 
 
 def main():
@@ -27,50 +56,31 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--window", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="concurrent cache slots (0 = one per request)")
+    ap.add_argument("--decode-block", type=int, default=16,
+                    help="fused decode steps between scheduler events")
+    ap.add_argument("--stages", type=int, default=1,
+                    help=">1 serves the PartitionPlan stages unjoined")
     args = ap.parse_args()
+    args.slots = args.slots or args.batch
 
     cfg = get(args.arch, smoke=args.smoke)
     if args.window:
         cfg = cfg.replace(sliding_window=args.window)
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    stream = synthetic_token_stream(args.batch * args.prompt_len + 1,
-                                    cfg.vocab_size, seed=0)
-    batch = {"tokens": jnp.asarray(
-        stream[: args.batch * args.prompt_len].reshape(args.batch, -1))}
-    if cfg.enc_dec:
-        batch["frames"] = jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model))
-    if cfg.frontend == "vision":
-        batch["image_embeds"] = jnp.zeros(
-            (args.batch, cfg.vision_tokens, cfg.d_model))
-    lc = args.prompt_len + args.new_tokens \
-        + (cfg.vision_tokens if cfg.frontend == "vision" else 0)
-    prefill = jax.jit(build_prefill_step(cfg, cache_len=lc))
-    decode = jax.jit(build_decode_step(cfg))
+    engine = build_engine(cfg, args)
+    requests = synthetic_requests(cfg, args)
 
-    logits, cache, pos = prefill(params, batch)
-    key = jax.random.PRNGKey(0)
-
-    def sample(lg, k):
-        lg = lg[:, : cfg.vocab_size]
-        if args.temperature <= 0:
-            return jnp.argmax(lg, -1).astype(jnp.int32)
-        return jax.random.categorical(k, lg / args.temperature, -1) \
-            .astype(jnp.int32)
-
-    tok = sample(logits, key)
     t0 = time.perf_counter()
-    outs = [tok]
-    for i in range(args.new_tokens - 1):
-        key, sk = jax.random.split(key)
-        logits, cache = decode(params, cache, tok, pos + i)
-        tok = sample(logits, sk)
-        outs.append(tok)
-    jax.block_until_ready(tok)
+    outs = engine.generate(requests)
     dt = time.perf_counter() - t0
-    n = args.batch * (args.new_tokens - 1)
+    n = sum(c.n_generated for c in outs)
     print(f"decoded {n} tokens in {dt*1e3:.0f}ms -> {n/dt:.0f} tok/s "
-          f"(batch={args.batch}, window={cfg.sliding_window or 'full'})")
-    print("sample:", jnp.stack(outs, 1)[0, :16].tolist())
+          f"(requests={args.batch}, slots={args.slots}, "
+          f"stages={args.stages}, window={cfg.sliding_window or 'full'})")
+    print("sample:", list(outs[0].tokens[:16]))
 
 
 if __name__ == "__main__":

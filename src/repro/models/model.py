@@ -395,6 +395,21 @@ def _ring_pack(k, lc, window):
     return out.at[:, slots].set(tail)
 
 
+def repack_prefill_cache(cfg, caches, cache_len):
+    """Repack full-seq prefill kv into fixed cache slots (ring layout when a
+    sliding window is set); carry states pass through unchanged."""
+    lc = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    slots = slot_spec(cfg)
+    cache = {}
+    for i, (kind, _, _) in enumerate(slots):
+        c = dict(caches[f"slot_{i}"]) if caches[f"slot_{i}"] else {}
+        if kind == "attn":
+            c["k"] = jax.vmap(lambda kk: _ring_pack(kk, lc, cfg.sliding_window))(c["k"])
+            c["v"] = jax.vmap(lambda vv: _ring_pack(vv, lc, cfg.sliding_window))(c["v"])
+        cache[f"slot_{i}"] = c
+    return cache
+
+
 def prefill(cfg, params, batch, cache_len):
     """Forward over the prompt, building the decode cache.
 
@@ -406,27 +421,17 @@ def prefill(cfg, params, batch, cache_len):
     x, _, caches = forward_groups(cfg, params["groups"], x, rope_cs=rope_cs,
                                   enc_out=enc_out, collect_cache=True,
                                   remat=False)
-    lc = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
-    # repack full-seq kv into fixed cache slots; carry states pass through
-    slots = slot_spec(cfg)
-    cache = {}
-    for i, (kind, _, _) in enumerate(slots):
-        c = dict(caches[f"slot_{i}"]) if caches[f"slot_{i}"] else {}
-        if kind == "attn":
-            c["k"] = jax.vmap(lambda kk: _ring_pack(kk, lc, cfg.sliding_window))(c["k"])
-            c["v"] = jax.vmap(lambda vv: _ring_pack(vv, lc, cfg.sliding_window))(c["v"])
-        cache[f"slot_{i}"] = c
+    cache = repack_prefill_cache(cfg, caches, cache_len)
     xl = L.norm_apply(params["final_norm"], x[:, -1:])
     logits = unembed(cfg, params, xl)[:, 0]
     return logits, cache, jnp.int32(s)
 
 
-def decode_step(cfg, params, cache, token, pos):
-    """One decode step. token: (B,) int32; pos: scalar int32 OR per-request
-    (B,) int32 vector (ragged batches: each request at its own position).
+def decode_embed(cfg, params, token, pos):
+    """Embed the current token(s) for decode; returns (x (B,1,d), rope_cs).
 
-    Returns (logits (B,V), new_cache).
-    """
+    `params` needs only the embedding-owning keys (stage 0 under a
+    PartitionPlan)."""
     dtype = cfg.activation_dtype()
     x = embed_tokens(cfg, params, token[:, None], dtype)
     if cfg.enc_dec:
@@ -436,6 +441,15 @@ def decode_step(cfg, params, cache, token, pos):
     else:
         rope_cs = L.rope_tables(pos[None] if jnp.ndim(pos) == 0 else pos,
                                 cfg.hd, cfg.rope_fraction, cfg.rope_theta)
+    return x, rope_cs
+
+
+def decode_groups(cfg, groups_params, cache, x, rope_cs, pos):
+    """One decode step over a (sub)stack of layer groups.
+
+    groups_params / cache are stacked over the same leading group dim (the
+    whole model, or one PartitionPlan stage's slice).  Returns (x, new_cache).
+    """
     slots = slot_spec(cfg)
 
     def body(x, xs):
@@ -448,7 +462,17 @@ def decode_step(cfg, params, cache, token, pos):
             new_cache_g[f"slot_{i}"] = nc
         return x, new_cache_g
 
-    x, new_cache = jax.lax.scan(body, x, (params["groups"], cache))
+    return jax.lax.scan(body, x, (groups_params, cache))
+
+
+def decode_step(cfg, params, cache, token, pos):
+    """One decode step. token: (B,) int32; pos: scalar int32 OR per-request
+    (B,) int32 vector (ragged batches: each request at its own position).
+
+    Returns (logits (B,V), new_cache).
+    """
+    x, rope_cs = decode_embed(cfg, params, token, pos)
+    x, new_cache = decode_groups(cfg, params["groups"], cache, x, rope_cs, pos)
     x = L.norm_apply(params["final_norm"], x)
     logits = unembed(cfg, params, x)[:, 0]
     return logits, new_cache

@@ -1,0 +1,30 @@
+"""`repro.serve` — the serving counterpart of `repro.train`.
+
+A typed request/response API fronted by an ``Engine`` that owns the params,
+a slot-based KV/state cache pool, a continuous-batching scheduler, and a
+fused decode+sample inner loop:
+
+    from repro.serve import Engine, GenerationConfig, Request
+
+    engine = Engine(cfg, params, max_slots=8)
+    outs = engine.generate([
+        Request(tokens=[1, 2, 3],
+                gen=GenerationConfig(max_new_tokens=16)),
+        Request(tokens=[4, 5], gen=GenerationConfig(temperature=0.8,
+                                                    top_p=0.95, seed=7)),
+    ])
+
+Pass ``plan=``/``stage_params=`` to serve the paper's partitions as
+deployable stages, and ``policy=`` to route through the production-mesh
+sharding plumbing.
+"""
+from repro.serve.api import Completion, GenerationConfig, Request
+from repro.serve.engine import Engine
+from repro.serve.kv_cache import CachePool
+from repro.serve.scheduler import Scheduler, SlotState
+from repro.serve.staged import staged_decode_step, staged_prefill
+
+__all__ = [
+    "Completion", "GenerationConfig", "Request", "Engine", "CachePool",
+    "Scheduler", "SlotState", "staged_decode_step", "staged_prefill",
+]

@@ -1,0 +1,313 @@
+"""The serving engine: continuous batching over a slot-based cache pool.
+
+``Engine.generate(requests)`` runs prefill-on-admit + a fused multi-token
+decode inner loop:
+
+* Admission: queued requests are grouped by prompt length (mixed-length
+  prompts never pad each other) and each group runs ONE jitted call that
+  prefills, samples the first tokens, and scatters caches + per-slot decode
+  state into the free slots.
+* Decode: between scheduler events the engine runs ONE jitted ``lax.scan``
+  of up to ``decode_block`` steps with sampling folded in — per-slot
+  positions, PRNG keys, temperature/top-k/top-p all live on device, so
+  nothing round-trips through the host per token.  The chunk length tracks
+  the nearest guaranteed retirement (rounded to a power of two so the
+  compile set stays ~log2(decode_block); overshoot is truncated at sync).
+* Retirement: at each sync the host checks EOS / max-token per slot,
+  retires finished requests, and admits queued ones into the freed slots.
+
+Modes: pass ``plan=`` + per-stage params for PartitionPlan-aware serving
+(paper partitions as deployable stages), and/or ``policy=`` (a
+``launch.sharding.Policy``) to route params and the cache pool through the
+production mesh plumbing.
+
+Known limit: admission compiles one prefill program per distinct prompt
+length (decode programs are bounded at ~log2(decode_block) per sampling
+mode, and the cache pool is bucketed).  Bucketing prompts needs left-pad
+masking in the prefill attention path — not built yet; until then, callers
+with adversarially varied prompt lengths should quantize lengths upstream.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.serve import sampling, staged
+from repro.serve.api import Completion, Request
+from repro.serve.kv_cache import CachePool, place_rows
+from repro.serve.scheduler import Scheduler
+
+
+class Engine:
+    """Serves one model (or one PartitionPlan stage chain) from resident
+    params.  Thread-compatible with one ``generate`` call at a time."""
+
+    def __init__(self, cfg, params=None, *, key=None, max_slots: int = 4,
+                 decode_block: int = 16, plan=None, stage_params=None,
+                 policy=None):
+        if (plan is None) != (stage_params is None):
+            raise ValueError("pass plan= and stage_params= together")
+        if params is not None and stage_params is not None:
+            raise ValueError("pass either joined params= or staged "
+                             "stage_params=, not both")
+        if params is None and stage_params is None:
+            # random weights only on explicit opt-in (benches/smoke tests) —
+            # a serving engine must never silently invent its weights
+            if key is None:
+                raise ValueError("pass params= / stage_params=, or key= to "
+                                 "explicitly serve random-init weights")
+            params = M.init_params(cfg, key)
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.decode_block = decode_block
+        self.plan = plan
+        self.policy = policy
+        if plan is not None:
+            if policy is not None:
+                stage_params = [jax.device_put(sp, policy.params_shardings(sp))
+                                for sp in stage_params]
+            self.params = list(stage_params)
+        else:
+            if policy is not None:
+                params = jax.device_put(params, policy.params_shardings(params))
+            self.params = params
+        self._prefill_jit: Dict[Any, Any] = {}
+        self._decode_jit: Dict[Any, Any] = {}
+        self._pool: Optional[CachePool] = None      # grow-only, one per engine
+        # donate the cache/state buffers into the jitted steps (in-place
+        # updates; halves peak cache memory) — CPU can't donate and would
+        # just warn per call
+        self._donate = jax.default_backend() != "cpu"
+        self.scheduler: Optional[Scheduler] = None  # last generate()'s
+
+    # -- forward fns (plain vs staged) --------------------------------------
+
+    def _decode_fn(self, params, cache, tok, pos):
+        if self.plan is not None:
+            return staged.staged_decode_step(self.cfg, self.plan, params,
+                                             cache, tok, pos)
+        return M.decode_step(self.cfg, params, cache, tok, pos)
+
+    def _prefill_fn(self, params, batch, cache_len):
+        if self.plan is not None:
+            return staged.staged_prefill(self.cfg, self.plan, params, batch,
+                                         cache_len)
+        return M.prefill(self.cfg, params, batch, cache_len)
+
+    def _admit_step(self, bshape, cache_len: int, mode: str):
+        """ONE jitted call per admitted group: prefill + first-token sample +
+        cache-pool scatter + per-slot state scatter (cached per group shape).
+        """
+        key = (bshape, cache_len, mode)
+        fn = self._prefill_jit.get(key)
+        if fn is not None:
+            return fn
+        vs = self.cfg.vocab_size
+
+        def admit(params, batch, pool_cache, tok, pos, keys, temps, tks,
+                  tps, slots, seeds, g_temps, g_tks, g_tps):
+            logits, group_cache, p1 = self._prefill_fn(params, batch,
+                                                       cache_len)
+            k0s, s0s = sampling.split_keys(
+                jax.vmap(sampling.make_key)(seeds))
+            t0 = sampling.sample_tokens(logits[:, :vs], s0s, g_temps, g_tks,
+                                        g_tps, mode=mode)
+            pool_cache = place_rows(pool_cache, group_cache, slots)
+            tok = tok.at[slots].set(t0)
+            pos = pos.at[slots].set(p1)
+            keys = keys.at[slots].set(k0s)
+            temps = temps.at[slots].set(g_temps)
+            tks = tks.at[slots].set(g_tks)
+            tps = tps.at[slots].set(g_tps)
+            return pool_cache, tok, pos, keys, temps, tks, tps, t0
+
+        donate = tuple(range(2, 9)) if self._donate else ()
+        fn = self._prefill_jit[key] = jax.jit(admit, donate_argnums=donate)
+        return fn
+
+    def _decode_chunk(self, n: int, mode: str):
+        """Jitted scan of n fused decode+sample steps (cached per n, mode)."""
+        fn = self._decode_jit.get((n, mode))
+        if fn is not None:
+            return fn
+        vs = self.cfg.vocab_size
+
+        def chunk(params, cache, tok, pos, keys, temps, tks, tps):
+            def body(carry, _):
+                cache, tok, pos, keys = carry
+                logits, cache = self._decode_fn(params, cache, tok, pos)
+                if mode != "greedy":
+                    keys, sub = sampling.split_keys(keys)
+                else:
+                    sub = keys
+                tok = sampling.sample_tokens(logits[:, :vs], sub, temps,
+                                             tks, tps, mode=mode)
+                return (cache, tok, pos + 1, keys), tok
+
+            (cache, tok, pos, keys), toks = jax.lax.scan(
+                body, (cache, tok, pos, keys), None, length=n)
+            return cache, tok, pos, keys, toks
+
+        donate = (1, 2, 3, 4) if self._donate else ()
+        fn = self._decode_jit[(n, mode)] = jax.jit(chunk,
+                                                   donate_argnums=donate)
+        return fn
+
+    # -- request plumbing ---------------------------------------------------
+
+    def _request_batch(self, reqs: Sequence[Request]):
+        """Batch for a group of SAME-LENGTH prompts (batched admission)."""
+        cfg = self.cfg
+        b = len(reqs)
+        toks = np.stack([np.asarray(r.tokens, np.int32).reshape(-1)
+                         for r in reqs])
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.enc_dec:
+            batch["frames"] = jnp.stack([
+                jnp.zeros((cfg.enc_seq, cfg.d_model), jnp.float32)
+                if r.frames is None else
+                jnp.asarray(r.frames).reshape(cfg.enc_seq, cfg.d_model)
+                for r in reqs])
+        if cfg.frontend == "vision":
+            batch["image_embeds"] = jnp.stack([
+                jnp.zeros((cfg.vision_tokens, cfg.d_model), jnp.float32)
+                if r.image_embeds is None else
+                jnp.asarray(r.image_embeds).reshape(cfg.vision_tokens,
+                                                    cfg.d_model)
+                for r in reqs])
+        assert batch["tokens"].shape[0] == b
+        return batch
+
+    def _cache_len_for(self, requests: Sequence[Request]) -> int:
+        extra = self.cfg.vision_tokens if self.cfg.frontend == "vision" else 0
+        return max(len(np.asarray(r.tokens).reshape(-1))
+                   + r.gen.max_new_tokens for r in requests) + extra
+
+    def _pool_for(self, need_len: int) -> CachePool:
+        """The engine's single cache pool, grow-only and bucketed to 32
+        tokens, so serving varied request lengths reuses one device cache
+        instead of allocating per distinct length."""
+        if self._pool is None or self._pool.cache_len < need_len:
+            size = -(-need_len // 32) * 32
+            self._pool = CachePool(self.cfg, self.max_slots, size,
+                                   policy=self.policy)
+        return self._pool
+
+    def _chunk_len(self, remaining: int) -> int:
+        """Fused steps until the next sync: the nearest guaranteed
+        retirement, rounded up to a power of two (bounds the jit-compile set
+        at ~log2(decode_block) scan lengths; overshoot tokens are truncated
+        at the sync, so the round-up costs at most a few cheap steps)."""
+        if remaining >= self.decode_block:
+            return self.decode_block
+        return min(1 << max(remaining - 1, 0).bit_length(), self.decode_block)
+
+    # -- the loop -----------------------------------------------------------
+
+    def generate(self, requests: Sequence[Request],
+                 cache_len: Optional[int] = None) -> List[Completion]:
+        """Continuously-batched generation; completions in request order.
+
+        cache_len is a minimum — the engine may serve from a larger pooled
+        cache (validity masks make extra slots inert)."""
+        if not requests:
+            return []
+        n_slots = self.max_slots
+        # pools are reusable without zeroing: admission fully overwrites a
+        # slot before it decodes, and free slots never reach a Completion
+        pool = self._pool_for(max(cache_len or 0,
+                                  self._cache_len_for(requests)))
+        cache_len = pool.cache_len
+        sched = self.scheduler = Scheduler(n_slots)
+
+        tok = jnp.zeros((n_slots,), jnp.int32)
+        pos = jnp.zeros((n_slots,), jnp.int32)
+        keys = jnp.zeros((n_slots, 2), jnp.uint32)
+        temps = jnp.zeros((n_slots,), jnp.float32)
+        tks = jnp.zeros((n_slots,), jnp.int32)
+        tps = jnp.ones((n_slots,), jnp.float32)
+
+        queue = deque()
+        done: Dict[int, Completion] = {}
+        for i, r in enumerate(requests):
+            if r.gen.max_new_tokens <= 0:      # prefill-only: nothing to emit
+                done[i] = Completion(
+                    id=r.id,
+                    prompt_tokens=tuple(int(t) for t in
+                                        np.asarray(r.tokens).reshape(-1)),
+                    tokens=(), finish_reason="length")
+            else:
+                queue.append((i, r))
+        mode = sampling.mode_for([r.gen for r in requests])
+
+        def finish(slot: int, reason: str) -> None:
+            st = sched.retire(slot)
+            st.finish_reason = reason
+            r = st.request
+            done[st.req_idx] = Completion(
+                id=r.id,
+                prompt_tokens=tuple(int(t) for t in
+                                    np.asarray(r.tokens).reshape(-1)),
+                tokens=tuple(st.emitted), finish_reason=reason)
+
+        def admit_group(items) -> None:
+            """Admit same-prompt-length requests via ONE jitted batched
+            prefill+sample+scatter call."""
+            nonlocal tok, pos, keys, temps, tks, tps
+            reqs = [r for _, r in items]
+            batch = self._request_batch(reqs)
+            slots = [sched.admit(i, r, batch["tokens"].shape[1])
+                     for i, r in items]
+            step = self._admit_step(batch["tokens"].shape, cache_len, mode)
+            pool.cache, tok, pos, keys, temps, tks, tps, t0 = step(
+                self.params, batch, pool.cache, tok, pos, keys, temps, tks,
+                tps, jnp.asarray(slots, jnp.int32),
+                jnp.asarray([r.gen.seed for r in reqs], jnp.uint32),
+                jnp.asarray([r.gen.temperature for r in reqs], jnp.float32),
+                jnp.asarray([r.gen.top_k for r in reqs], jnp.int32),
+                jnp.asarray([r.gen.top_p for r in reqs], jnp.float32))
+            t0h = np.asarray(t0)
+            for row, (slot, (i, r)) in enumerate(zip(slots, items)):
+                g = r.gen
+                sched.active[slot].emitted.append(int(t0h[row]))
+                if g.eos_id is not None and int(t0h[row]) == g.eos_id:
+                    finish(slot, "eos")
+                elif g.max_new_tokens <= 1:
+                    finish(slot, "length")
+
+        def admit_ready() -> None:
+            while queue and sched.free:
+                take = [queue.popleft()
+                        for _ in range(min(len(queue), len(sched.free)))]
+                groups: Dict[int, list] = {}
+                for i, r in take:
+                    plen = np.asarray(r.tokens).reshape(-1).shape[0]
+                    groups.setdefault(plen, []).append((i, r))
+                for items in groups.values():
+                    admit_group(items)
+
+        admit_ready()
+        while sched.active:
+            n = self._chunk_len(sched.min_remaining())
+            step = self._decode_chunk(n, mode)
+            pool.cache, tok, pos, keys, toks = step(
+                self.params, pool.cache, tok, pos, keys, temps, tks, tps)
+            toks_h = np.asarray(toks)                      # (n, n_slots)
+            for slot in list(sched.active):
+                st = sched.active[slot]
+                eos = st.request.gen.eos_id
+                for t in toks_h[:, slot]:
+                    st.emitted.append(int(t))
+                    if eos is not None and int(t) == eos:
+                        finish(slot, "eos")
+                        break
+                    if st.remaining <= 0:
+                        finish(slot, "length")
+                        break
+            admit_ready()
+        return [done[i] for i in range(len(requests))]

@@ -1,0 +1,39 @@
+"""Slot-based decode cache pool.
+
+One device-resident cache pytree sized for ``n_slots`` concurrent requests
+(the batch dim of every leaf), reusing the ring-buffered sliding-window
+layouts from ``models.model.init_cache``.  Admitting a request scatters its
+prefill cache rows into free slots via ``place_rows`` (the engine fuses the
+same function into its jitted admission step); every cache family (KV
+attention, ring window, mamba conv/ssm, xLSTM states, whisper cross-KV)
+shares the same (G, B, ...) layout, so one scatter covers them all.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models import model as M
+
+
+def place_rows(pool_cache, group_cache, slots):
+    """Scatter the rows of a prefilled group cache into pool slots `slots`
+    ((R,) int32; batch axis is 1 under the group stack).  Full overwrite —
+    a reused slot never leaks its predecessor.  jit-safe."""
+    return jax.tree_util.tree_map(
+        lambda p, c: p.at[:, slots].set(c.astype(p.dtype)),
+        pool_cache, group_cache)
+
+
+class CachePool:
+    """Owns the decode cache for up to ``n_slots`` in-flight requests.
+    Placement happens via ``place_rows`` fused into the engine's jitted
+    admission step; this class owns allocation, sizing, and sharding."""
+
+    def __init__(self, cfg, n_slots: int, cache_len: int, *, policy=None):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.cache = M.init_cache(cfg, n_slots, cache_len)
+        if policy is not None:
+            self.cache = jax.device_put(
+                self.cache, policy.cache_shardings(self.cache, n_slots))

@@ -1,0 +1,82 @@
+"""Batched, jit-safe token sampling.
+
+All knobs are per-slot ARRAYS (temperature, top_k, top_p), so one jitted
+function serves a continuous batch of requests with heterogeneous configs —
+and the whole thing folds into the fused decode scan: no ``jax.random.split``
+or ``argmax`` round-trips through the host per token.
+
+Conventions (matching ``GenerationConfig``): temperature <= 0 -> greedy,
+top_k == 0 -> no top-k filter, top_p >= 1 -> no nucleus filter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def make_key(seed) -> jax.Array:
+    """Raw uint32 key data for one request's private sampling stream."""
+    return jax.random.PRNGKey(seed)
+
+
+def split_keys(keys):
+    """Per-slot split. keys: (S, 2) uint32 -> (carry (S,2), sample (S,2))."""
+    ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return ks[:, 0], ks[:, 1]
+
+
+def filter_logits(logits, top_k, top_p):
+    """Fused top-k + nucleus filter off ONE descending sort (this runs per
+    token inside the fused decode scan — the hottest serving loop).
+
+    logits: (S, V); top_k: (S,) int32 (0 disables); top_p: (S,) float
+    (>= 1 disables).  Both filters keep a prefix of the descending sort:
+    top-k caps the prefix at k, top-p at the smallest prefix with
+    cumulative prob >= p over the top-k-renormalized distribution (so the
+    argmax token always survives)."""
+    v = logits.shape[-1]
+    desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    rank = jnp.arange(v)[None, :]
+    keep_k = (top_k <= 0)[:, None] | (rank < top_k[:, None])
+    probs = jax.nn.softmax(jnp.where(keep_k, desc, NEG_INF), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # rank 0 survives unconditionally so degenerate knobs (top_p <= 0)
+    # degrade to greedy, never to an all-masked uniform draw
+    keep_p = (top_p >= 1.0)[:, None] | ((cum - probs) < top_p[:, None]) \
+        | (rank == 0)
+    keep = keep_k & keep_p
+    cutoff = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1)
+    return jnp.where(logits >= cutoff[:, None], logits, NEG_INF)
+
+
+def mode_for(configs) -> str:
+    """Cheapest statically-sufficient sampling mode for a set of
+    GenerationConfigs.  Disabled knobs are mathematical no-ops, so dropping
+    them changes compile cost only, never tokens: "greedy" skips sampling
+    entirely, "temp" skips the top-k/top-p sorts, "full" does everything.
+    """
+    if all(g.temperature <= 0 for g in configs):
+        return "greedy"
+    if all(g.top_k == 0 and g.top_p >= 1.0 for g in configs):
+        return "temp"
+    return "full"
+
+
+def sample_tokens(logits, keys, temperature, top_k, top_p, *, mode="full"):
+    """One sampling step for a continuous batch.
+
+    logits: (S, V) ALREADY sliced to the real vocab (pad rows of the 128-
+    aligned unembedding must never be sampled); keys: (S, 2) uint32;
+    temperature/top_k/top_p: (S,) arrays.  `mode` (static): see mode_for.
+    Returns (S,) int32 tokens.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if mode == "greedy":
+        return greedy
+    lg = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)[:, None]
+    if mode == "full":
+        lg = filter_logits(lg, top_k, top_p)
+    drawn = jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, drawn)

@@ -1,0 +1,65 @@
+"""Continuous-batching scheduler: slot bookkeeping + admission control.
+
+Pure host-side logic (the device side lives in ``kv_cache`` / ``engine``).
+Slots move free -> active on ``admit`` and back on ``retire``; every
+transition is audited (``events``) and checked (``_check``) so a leaked or
+double-booked slot fails loudly instead of silently serving two requests
+from one cache row.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclass
+class SlotState:
+    """Host-side state of one in-flight request."""
+    req_idx: int                     # position in the generate() request list
+    request: Any
+    n_prompt: int
+    emitted: List[int] = field(default_factory=list)
+    finish_reason: Optional[str] = None
+
+    @property
+    def remaining(self) -> int:
+        return self.request.gen.max_new_tokens - len(self.emitted)
+
+
+class Scheduler:
+    """Admit requests into free cache slots; retire on EOS / length."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.free: List[int] = list(range(n_slots))
+        self.active: Dict[int, SlotState] = {}
+        self.events: List[Tuple[str, int]] = []
+        self.max_concurrent = 0
+
+    def admit(self, req_idx: int, request, n_prompt: int) -> int:
+        if not self.free:
+            raise RuntimeError("admit() with no free slot")
+        slot = self.free.pop(0)
+        assert slot not in self.active, f"slot {slot} double-booked"
+        self.active[slot] = SlotState(req_idx, request, n_prompt)
+        self.events.append(("admit", slot))
+        self.max_concurrent = max(self.max_concurrent, len(self.active))
+        self._check()
+        return slot
+
+    def retire(self, slot: int) -> SlotState:
+        st = self.active.pop(slot)
+        self.free.append(slot)
+        self.events.append(("retire", slot))
+        self._check()
+        return st
+
+    def min_remaining(self) -> int:
+        """Tokens until the nearest guaranteed retirement (schedules the
+        fused-decode chunk length)."""
+        return min(st.remaining for st in self.active.values())
+
+    def _check(self) -> None:
+        ids = sorted(self.free) + sorted(self.active)
+        assert sorted(ids) == list(range(self.n_slots)), (
+            f"slot leak: free={self.free} active={sorted(self.active)}")

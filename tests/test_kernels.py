@@ -33,6 +33,54 @@ def test_flash_attention_sweep(b, s, h, kv, d, dtype, causal, window):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("b,lc,h,kv,d", [
+    (2, 32, 4, 2, 64), (1, 100, 8, 2, 128), (3, 16, 6, 6, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_kernel_sweep(b, lc, h, kv, d, dtype):
+    from repro.kernels.flash_attention.kernel import decode_attention_tpu
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, lc, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, lc, kv, d), dtype)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    for pos in (lc // 2,                                   # partial cache
+                jnp.arange(b, dtype=jnp.int32) + 3,        # ragged batch
+                2 * lc):                                   # ring: all valid
+        out = decode_attention_tpu(q, k, v, pos, bk=16)
+        exp = fa_ref.decode_attention(q, k, v, pos)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_attention_dispatch_force_ref(monkeypatch):
+    """REPRO_FORCE_REF=1 pins the jnp reference even when the backend
+    reports TPU; without it the TPU path takes the Pallas kernels."""
+    from repro.kernels.flash_attention import kernel as fa_kernel
+    from repro.kernels.flash_attention import ops
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 1, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 16, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 16, 2, 64), jnp.float32)
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    hits = []
+    monkeypatch.setattr(fa_kernel, "decode_attention_tpu",
+                        lambda *a, **kw: hits.append("decode") or
+                        fa_ref.decode_attention(a[0], a[1], a[2], a[3]))
+    monkeypatch.setattr(fa_kernel, "flash_attention_tpu",
+                        lambda *a, **kw: hits.append("flash") or
+                        fa_ref.naive_attention(a[0], a[1], a[2]))
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    ops.decode_attention(q, k, v, 7)
+    ops.flash_attention(q, k, v)
+    assert hits == []                      # forced to the reference path
+    monkeypatch.delenv("REPRO_FORCE_REF")
+    ops.decode_attention(q, k, v, 7)
+    ops.flash_attention(q, k, v)
+    assert hits == ["decode", "flash"]     # TPU path dispatches the kernels
+
+
 def test_flash_vs_chunked_ref_agree():
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (2, 160, 4, 64), jnp.float32)

@@ -1,0 +1,223 @@
+"""`repro.serve` engine: continuous batching must be a pure latency/throughput
+optimization — never a tokens change.
+
+Covers: (a) continuous-batched generation token-identical to one-request-at-
+a-time generation at temperature 0 (standard decoder, sliding-window ring,
+and a recurrent-state arch); (b) ring cache == full cache within the window;
+(c) staggered admit/retire never leaks a slot; (d) sampler sanity under a
+fixed key; plus PartitionPlan-staged serving and Policy plumbing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core import partition
+from repro.models import model as M
+from repro.serve import (Engine, GenerationConfig, Request, Scheduler,
+                         sampling)
+
+
+def _cfg(name, window=0):
+    cfg = get(name, smoke=True).replace(dtype="float32")
+    if window:
+        cfg = cfg.replace(sliding_window=window)
+    return cfg
+
+
+def _params(cfg, seed=0):
+    return M.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _requests(cfg, lens=(8, 12, 5, 10), news=(6, 9, 4, 7)):
+    """Mixed-length prompts + mixed durations: staggers admits/retires."""
+    rng = np.random.RandomState(0)
+    return [Request(tokens=rng.randint(0, cfg.vocab_size, size=(ln,)),
+                    gen=GenerationConfig(max_new_tokens=nn), id=f"r{i}")
+            for i, (ln, nn) in enumerate(zip(lens, news))]
+
+
+def _greedy_loop(cfg, params, req):
+    """One-request-at-a-time reference: prefill + per-token python decode."""
+    toks = jnp.asarray(np.asarray(req.tokens, np.int32)[None])
+    lc = toks.shape[1] + req.gen.max_new_tokens \
+        + (cfg.vision_tokens if cfg.frontend == "vision" else 0)
+    batch = {"tokens": toks}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.zeros((1, cfg.enc_seq, cfg.d_model))
+    logits, cache, pos = M.prefill(cfg, params, batch, cache_len=lc)
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    out = [int(tok[0])]
+    for i in range(req.gen.max_new_tokens - 1):
+        logits, cache = M.decode_step(cfg, params, cache, tok, pos + i)
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return tuple(out)
+
+
+# -- (a) continuous batching == sequential, greedy --------------------------
+
+@pytest.mark.parametrize("name,window", [
+    ("qwen2-1.5b", 0),      # standard decoder
+    ("qwen2-1.5b", 8),      # sliding-window ring cache
+    ("xlstm-125m", 0),      # recurrent-state caches
+])
+def test_continuous_batching_token_identical(name, window):
+    cfg = _cfg(name, window)
+    params = _params(cfg)
+    reqs = _requests(cfg)
+    outs = Engine(cfg, params, max_slots=2, decode_block=4).generate(reqs)
+    for req, c in zip(reqs, outs):
+        assert c.tokens == _greedy_loop(cfg, params, req), c
+        assert c.finish_reason == "length"
+        assert c.n_generated == req.gen.max_new_tokens
+
+
+def test_slots_one_equals_slots_many():
+    cfg = _cfg("qwen2-1.5b")
+    params = _params(cfg)
+    reqs = _requests(cfg)
+    a = Engine(cfg, params, max_slots=1, decode_block=4).generate(reqs)
+    b = Engine(cfg, params, max_slots=4, decode_block=4).generate(reqs)
+    assert [c.tokens for c in a] == [c.tokens for c in b]
+
+
+# -- (b) ring cache == full cache within the window -------------------------
+
+def test_ring_cache_matches_full_within_window():
+    base = _cfg("qwen2-1.5b")
+    params = _params(base)
+    reqs = _requests(base, lens=(8, 6), news=(6, 8))
+    # window covers prompt+generation entirely -> identical tokens
+    full = Engine(base, params, max_slots=2, decode_block=4).generate(reqs)
+    ring = Engine(base.replace(sliding_window=32), params, max_slots=2,
+                  decode_block=4).generate(reqs)
+    assert [c.tokens for c in full] == [c.tokens for c in ring]
+
+
+# -- (c) staggered admit/retire never leaks a slot --------------------------
+
+def test_scheduler_never_leaks_slots():
+    cfg = _cfg("qwen2-1.5b")
+    params = _params(cfg)
+    # more requests than slots, wildly varied durations (incl. 1-token)
+    reqs = _requests(cfg, lens=(8, 5, 8, 5, 7, 8), news=(1, 5, 3, 7, 2, 4))
+    eng = Engine(cfg, params, max_slots=2, decode_block=4)
+    outs = eng.generate(reqs)
+    sched = eng.scheduler
+    assert sorted(sched.free) == [0, 1] and not sched.active
+    admits = [s for e, s in sched.events if e == "admit"]
+    retires = [s for e, s in sched.events if e == "retire"]
+    assert len(admits) == len(retires) == len(reqs)
+    assert sched.max_concurrent <= 2
+    for req, c in zip(reqs, outs):
+        assert c.n_generated == req.gen.max_new_tokens
+    # Scheduler rejects double-admission beyond capacity
+    s = Scheduler(1)
+    s.admit(0, reqs[0], 8)
+    with pytest.raises(RuntimeError):
+        s.admit(1, reqs[1], 5)
+
+
+def test_eos_retires_and_frees_slot():
+    cfg = _cfg("qwen2-1.5b")
+    params = _params(cfg)
+    ref = _greedy_loop(cfg, params, _requests(cfg)[0])
+    eos = ref[2]
+    reqs = _requests(cfg)
+    reqs[0] = Request(tokens=reqs[0].tokens,
+                      gen=GenerationConfig(max_new_tokens=6, eos_id=eos))
+    outs = Engine(cfg, params, max_slots=2, decode_block=4).generate(reqs)
+    assert outs[0].finish_reason == "eos"
+    assert outs[0].tokens == ref[:3]          # eos included, then retired
+    assert outs[1].n_generated == reqs[1].gen.max_new_tokens
+
+
+# -- (d) samplers are distribution-sane under a fixed key -------------------
+
+def test_samplers_sane_fixed_key():
+    key = jax.random.PRNGKey(0)
+    v, n = 64, 256
+    logits = jnp.tile(jax.random.normal(key, (1, v)) * 3.0, (n, 1))
+    keys = jax.vmap(lambda s: jax.random.PRNGKey(s))(jnp.arange(n))
+    ones = jnp.ones((n,), jnp.float32)
+
+    # temperature 0 -> argmax regardless of keys/filters
+    out = sampling.sample_tokens(logits, keys, ones * 0.0,
+                                 jnp.full((n,), 5, jnp.int32), ones * 0.5)
+    assert set(np.asarray(out).tolist()) == {int(jnp.argmax(logits[0]))}
+
+    # top_k=1 -> argmax even at high temperature
+    out = sampling.sample_tokens(logits, keys, ones * 5.0,
+                                 jnp.ones((n,), jnp.int32), ones)
+    assert set(np.asarray(out).tolist()) == {int(jnp.argmax(logits[0]))}
+
+    # top_k=5 -> support is exactly within the top-5 set, and >1 distinct
+    top5 = set(np.asarray(jnp.argsort(logits[0])[::-1][:5]).tolist())
+    out = sampling.sample_tokens(logits, keys, ones * 2.0,
+                                 jnp.full((n,), 5, jnp.int32), ones)
+    seen = set(np.asarray(out).tolist())
+    assert seen <= top5 and len(seen) > 1
+
+    # top_p -> smallest prefix covering p (peaked dist: tiny p == argmax)
+    out = sampling.sample_tokens(logits, keys, ones, jnp.zeros((n,), jnp.int32),
+                                 ones * 1e-4)
+    assert set(np.asarray(out).tolist()) == {int(jnp.argmax(logits[0]))}
+
+    # unfiltered sampling roughly follows softmax: the argmax token must be
+    # the modal sample under a peaked distribution
+    out = np.asarray(sampling.sample_tokens(logits, keys, ones,
+                                            jnp.zeros((n,), jnp.int32), ones))
+    vals, counts = np.unique(out, return_counts=True)
+    assert vals[np.argmax(counts)] == int(jnp.argmax(logits[0]))
+
+    # per-slot independence: same key row -> same token, different -> varies
+    out1 = sampling.sample_tokens(logits, keys, ones * 2.0,
+                                  jnp.zeros((n,), jnp.int32), ones)
+    out2 = sampling.sample_tokens(logits, keys, ones * 2.0,
+                                  jnp.zeros((n,), jnp.int32), ones)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# -- staged + policy serving ------------------------------------------------
+
+def test_partitioned_engine_matches_joined():
+    cfg = _cfg("qwen2-1.5b")
+    params = _params(cfg)
+    reqs = _requests(cfg, lens=(8, 5), news=(5, 4))
+    joined = Engine(cfg, params, max_slots=2, decode_block=4).generate(reqs)
+    plan = partition.make_plan(cfg, 2)
+    sp = [partition.slice_stage_params(cfg, plan, params, k)
+          for k in range(plan.n_stages)]
+    stagedo = Engine(cfg, plan=plan, stage_params=sp, max_slots=2,
+                     decode_block=4).generate(reqs)
+    assert [c.tokens for c in joined] == [c.tokens for c in stagedo]
+
+
+def test_policy_plumbing_single_device():
+    from repro.launch.sharding import Policy
+    cfg = _cfg("qwen2-1.5b")
+    params = _params(cfg)
+    reqs = _requests(cfg, lens=(8,), news=(4,))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plain = Engine(cfg, params, max_slots=1, decode_block=4).generate(reqs)
+    sharded = Engine(cfg, params, max_slots=1, decode_block=4,
+                     policy=Policy(cfg, mesh)).generate(reqs)
+    assert [c.tokens for c in plain] == [c.tokens for c in sharded]
+
+
+def test_sampled_stream_independent_of_batching():
+    """A request's sampled tokens depend only on its own seed, not on what
+    else is in the batch (continuous batching must not couple streams)."""
+    cfg = _cfg("qwen2-1.5b")
+    params = _params(cfg)
+    gen = GenerationConfig(max_new_tokens=6, temperature=0.8, top_k=16,
+                           top_p=0.9, seed=13)
+    rng = np.random.RandomState(1)
+    r = Request(tokens=rng.randint(0, cfg.vocab_size, size=(8,)), gen=gen)
+    other = _requests(cfg, lens=(5, 10), news=(7, 3))
+    solo = Engine(cfg, params, max_slots=1, decode_block=4).generate([r])
+    crowd = Engine(cfg, params, max_slots=3,
+                   decode_block=4).generate([other[0], r, other[1]])
+    assert solo[0].tokens == crowd[1].tokens
