@@ -134,9 +134,33 @@ def fit_table(results, mesh="single"):
     return "\n".join(lines)
 
 
+def precision_lines() -> str:
+    """Machine-balance header: peak FLOP/s and the roofline ridge point
+    (FLOP/byte where compute overtakes HBM) per compute precision.  bf16
+    doubles MXU throughput AND halves activation/cache bytes, so the same
+    workload sits at twice the arithmetic intensity against a ridge only 2x
+    further out — the whole point of the repro.precision bf16 policy."""
+    import sys as _sys
+    _sys.path.insert(0, "src")
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16, PEAK_FLOPS_FP32
+    lines = ["### Machine balance (TPU v5e, per chip)", "",
+             "| precision | peak FLOP/s | HBM B/s | ridge FLOP/byte |",
+             "|---|---|---|---|"]
+    for name, peak in (("bf16", PEAK_FLOPS_BF16), ("fp32", PEAK_FLOPS_FP32)):
+        lines.append(f"| {name} | {peak/1e12:.1f}T | {HBM_BW/1e9:.0f}G | "
+                     f"{peak/HBM_BW:.0f} |")
+    lines.append("")
+    lines.append("(bf16 activations also halve the *bytes* side of every "
+                 "memory_s term below; pair `--precision bf16` and "
+                 "`--precision fp32` dry-run variants to see the delta.)")
+    return "\n".join(lines)
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
     results = load(path)
+    print(precision_lines())
+    print()
     print(markdown(table(results, "single"), "Single-pod 16x16 (256 chips)"))
     print()
     print(markdown(table(results, "multi"),

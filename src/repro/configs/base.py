@@ -89,7 +89,12 @@ class ModelConfig:
     # gather expert weights over the data axis before expert matmuls
     # (replaces (E,C,ff)-sized activation psums with weight-sized gathers)
     moe_gather_weights: bool = False
-    # numerics
+    # numerics — the model-side surface of the repro.precision policy:
+    # `dtype` is the COMPUTE dtype (activations, matmul inputs, KV/state
+    # caches, boundary spills; set via PrecisionPolicy.apply_to_model or the
+    # launchers' --precision flag), `param_dtype` the weight STORAGE dtype.
+    # Norms, softmax/attention logits, residual adds, and loss/grad
+    # accumulation always run in fp32 (the policy's accum dtype).
     dtype: str = "bfloat16"
     param_dtype: str = "float32"
     max_seq: int = 131072

@@ -1,0 +1,27 @@
+"""Shared backend dispatch for the Pallas kernels.
+
+Every kernel family routes through these two predicates: Pallas on TPU,
+pure-jnp reference elsewhere, with ``REPRO_FORCE_REF=1`` pinning the
+reference even on TPU so bf16-in/fp32-accum numerics can be cross-checked
+against the same math on both paths (tests/test_precision.py).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def force_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "") == "1"
+
+
+def use_pallas() -> bool:
+    return on_tpu() and not force_ref()

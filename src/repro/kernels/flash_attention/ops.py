@@ -8,27 +8,18 @@ the serving engine is testable against both.
 """
 from __future__ import annotations
 
-import os
-
-import jax
+from repro.kernels.dispatch import use_pallas
 
 from . import ref
 
 
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover
-        return False
-
-
-def _force_ref() -> bool:
-    return os.environ.get("REPRO_FORCE_REF", "") == "1"
-
-
 def flash_attention(q, k, v, *, causal=True, window=0, chunk=512):
-    """Training/prefill attention. q:(B,S,H,D) k,v:(B,S,KV,D)."""
-    if _on_tpu() and not _force_ref():
+    """Training/prefill attention. q:(B,S,H,D) k,v:(B,S,KV,D).
+
+    Inputs may be any float dtype (bf16/fp16 under a reduced-precision
+    policy); both backends accumulate scores and the softmax in fp32 and
+    return the input dtype."""
+    if use_pallas():
         from .kernel import flash_attention_tpu
         return flash_attention_tpu(q, k, v, causal=causal, window=window)
     return ref.chunked_attention(q, k, v, causal=causal, window=window, chunk=chunk)
@@ -36,7 +27,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, chunk=512):
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=0):
     """Single-token decode over a KV cache (ring-buffered if window>0)."""
-    if _on_tpu() and not _force_ref():
+    if use_pallas():
         from .kernel import decode_attention_tpu
         return decode_attention_tpu(q, k_cache, v_cache, pos, window=window)
     return ref.decode_attention(q, k_cache, v_cache, pos, window=window)

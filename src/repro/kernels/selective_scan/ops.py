@@ -1,13 +1,16 @@
-"""Dispatching wrapper for the selective scan: Pallas on TPU, jnp elsewhere."""
+"""Dispatching wrapper for the selective scan: Pallas on TPU, jnp elsewhere
+(``REPRO_FORCE_REF=1`` pins the reference on TPU, same as the other
+kernels — both backends take compute-dtype inputs and keep the recurrent
+state in fp32)."""
 from __future__ import annotations
 
-import jax
+from repro.kernels.dispatch import use_pallas
 
 from . import ref
 
 
 def selective_scan(u, dt, A, B, C, D, *, chunk=128, h0=None):
-    if jax.default_backend() == "tpu":
+    if use_pallas():
         from .kernel import selective_scan_tpu
         return selective_scan_tpu(u, dt, A, B, C, D, chunk=chunk, h0=h0)
     return ref.selective_scan(u, dt, A, B, C, D, chunk=chunk, h0=h0)

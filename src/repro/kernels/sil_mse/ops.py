@@ -1,8 +1,14 @@
-"""Fused SIL-MSE loss with custom VJP; Pallas on TPU, jnp reference elsewhere."""
+"""Fused SIL-MSE loss with custom VJP; Pallas on TPU, jnp reference elsewhere
+(``REPRO_FORCE_REF=1`` pins the reference on TPU).  Activations may be in
+the policy's compute dtype — both backends difference and reduce in fp32 and
+return a fp32 scalar; the activation gradient comes back in the activation's
+dtype."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.dispatch import use_pallas
 
 from . import ref
 
@@ -13,7 +19,7 @@ def sil_mse(act, sil, labels):
 
 
 def _fwd_impl(act, sil, labels):
-    if jax.default_backend() == "tpu":
+    if use_pallas():
         from .kernel import sil_mse_tpu
         return sil_mse_tpu(act, sil, labels)
     return ref.sil_mse(act, sil, labels)

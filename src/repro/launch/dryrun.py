@@ -123,7 +123,8 @@ def model_flops(cfg, shape) -> float:
 
 def dryrun_one(arch: str, shape_name: str, *, multi_pod=False, mode="baseline",
                seq_shard=False, rec_shard=False, accum_override=None,
-               moe_local=False, mesh_shape=None, verbose=True) -> Dict[str, Any]:
+               moe_local=False, mesh_shape=None, precision=None,
+               verbose=True) -> Dict[str, Any]:
     shape = INPUT_SHAPES[shape_name]
     cfg0 = get(arch)
     ok, reason = S.applicable(cfg0, shape)
@@ -131,11 +132,19 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod=False, mode="baseline",
         "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
         "mode": mode, "seq_shard": seq_shard, "rec_shard": rec_shard,
     }
+    if precision is not None:
+        rec["precision"] = precision
     if not ok:
         rec["status"] = "skipped"
         rec["reason"] = reason
         return rec
     cfg = S.arch_for_shape(cfg0, shape)
+    if precision is not None:
+        # re-dtype the compute path (activations / caches / boundary
+        # streams); the analytic byte model and init_cache both follow
+        # cfg.dtype, so every downstream estimate is policy-aware
+        from repro.precision import get_policy
+        cfg = get_policy(precision).apply_to_model(cfg)
     if mode == "pipeline" and not multi_pod:
         multi_pod = True  # pipeline baseline = stage-per-pod on 2 pods
         rec["multi_pod"] = True
@@ -344,6 +353,10 @@ def main(argv=None):
                     help="locality-grouped MoE dispatch (perf variant)")
     ap.add_argument("--mesh", default=None,
                     help="pod mesh shape override, e.g. 32x8 (perf variant)")
+    ap.add_argument("--precision", default=None,
+                    choices=["fp32", "bf16", "fp16"],
+                    help="precision policy for the compute path (activation "
+                         "+ cache dtypes; params keep their storage dtype)")
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args(argv)
@@ -374,6 +387,8 @@ def main(argv=None):
                 variant += f"+mesh{args.mesh}"
             if args.accum:
                 variant += f"+accum{args.accum}"
+            if args.precision:
+                variant += f"+{args.precision}"
             is_multi = args.multi_pod or args.mode == "pipeline"
             key = f"{arch}|{shape}|{'multi' if is_multi else 'single'}" \
                 f"|{args.mode}|{variant}"
@@ -390,7 +405,8 @@ def main(argv=None):
                                  moe_local=args.moe_local,
                                  mesh_shape=tuple(int(x) for x in
                                                   args.mesh.split("x"))
-                                 if args.mesh else None)
+                                 if args.mesh else None,
+                                 precision=args.precision)
             except Exception as e:
                 rec = {"arch": arch, "shape": shape, "status": "error",
                        "error": f"{type(e).__name__}: {e}",

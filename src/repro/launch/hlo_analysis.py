@@ -19,6 +19,7 @@ import re
 from typing import Dict, Optional
 
 from repro.configs.base import InputShape, ModelConfig
+from repro.precision import dtype_itemsize
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -199,7 +200,9 @@ def analytic_hbm_bytes_per_chip(cfg: ModelConfig, shape: InputShape,
     prefill: params once, cache written once, activation stream.
     decode:  params once, cache read+written.
     """
-    dt = 2 if cfg.dtype == "bfloat16" else 4
+    # activation-stream element size follows the precision policy's
+    # compute dtype (bf16/fp16 halve it), not a hard-coded constant
+    dt = dtype_itemsize(cfg.dtype)
     b, s = shape.global_batch, shape.seq_len
     d = cfg.d_model
     g_boundaries = cfg.n_layers  # one residual save per layer (remat policy)
@@ -229,7 +232,9 @@ def analytic_peak_bytes_per_chip(cfg: ModelConfig, shape: InputShape,
     params + optimizer + grad accumulator + per-microbatch activation saves
     (one residual per layer under the remat policy) + logits + transient
     gathered layer weights)."""
-    dt = 2 if cfg.dtype == "bfloat16" else 4
+    # activation-stream element size follows the precision policy's
+    # compute dtype (bf16/fp16 halve it), not a hard-coded constant
+    dt = dtype_itemsize(cfg.dtype)
     b, s = shape.global_batch, shape.seq_len
     d = cfg.d_model
     if shape.kind == "train":

@@ -39,6 +39,7 @@ def tp_axis(mesh) -> str:
 
 
 # TPU v5e hardware constants (per chip) for the roofline model
-PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s (MXU native)
+PEAK_FLOPS_FP32 = 98.5e12     # FLOP/s (fp32 via multi-pass MXU, ~half rate)
 HBM_BW = 819e9                # B/s
 ICI_BW = 50e9                 # B/s per link

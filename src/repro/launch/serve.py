@@ -26,14 +26,16 @@ from repro.serve import Engine, GenerationConfig, Request
 def build_engine(cfg, args):
     """Engine in joined or PartitionPlan-staged mode (--stages > 1)."""
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    precision = getattr(args, "precision", None)
     if args.stages > 1:
         plan = partition.make_plan(cfg, args.stages)
         stage_params = [partition.slice_stage_params(cfg, plan, params, k)
                         for k in range(plan.n_stages)]
         return Engine(cfg, plan=plan, stage_params=stage_params,
-                      max_slots=args.slots, decode_block=args.decode_block)
+                      max_slots=args.slots, decode_block=args.decode_block,
+                      precision=precision)
     return Engine(cfg, params, max_slots=args.slots,
-                  decode_block=args.decode_block)
+                  decode_block=args.decode_block, precision=precision)
 
 
 def synthetic_requests(cfg, args) -> list:
@@ -64,6 +66,11 @@ def main():
                     help="fused decode steps between scheduler events")
     ap.add_argument("--stages", type=int, default=1,
                     help=">1 serves the PartitionPlan stages unjoined")
+    ap.add_argument("--precision", default=None,
+                    choices=["fp32", "bf16", "fp16"],
+                    help="serving precision policy: activations + the slot "
+                         "cache pool in the compute dtype, fp32 sampling "
+                         "logits (default: the arch config's dtype)")
     args = ap.parse_args()
     args.slots = args.slots or args.batch
 
@@ -77,9 +84,13 @@ def main():
     outs = engine.generate(requests)
     dt = time.perf_counter() - t0
     n = sum(c.n_generated for c in outs)
+    pool = engine._pool
+    cache_note = "" if pool is None else \
+        f", cache={pool.nbytes/2**20:.1f}MiB@{engine.cfg.dtype}"
     print(f"decoded {n} tokens in {dt*1e3:.0f}ms -> {n/dt:.0f} tok/s "
           f"(requests={args.batch}, slots={args.slots}, "
-          f"stages={args.stages}, window={cfg.sliding_window or 'full'})")
+          f"stages={args.stages}, window={cfg.sliding_window or 'full'}"
+          f"{cache_note})")
     print("sample:", list(outs[0].tokens[:16]))
 
 

@@ -67,14 +67,19 @@ def build_train_step(cfg: ModelConfig, opt, *, accum: int = 1,
     grad_pspecs: optional PartitionSpec tree matching params; gradients are
     constrained to it immediately after value_and_grad so XLA emits
     reduce-scatters to the FSDP shard instead of full all-reduces
-    (EXPERIMENTS.md §Perf iteration 4: 16x less gradient traffic)."""
+    (EXPERIMENTS.md §Perf iteration 4: 16x less gradient traffic).
 
-    def loss_for(params, mb):
+    The loss is scaled by the live loss scale carried in the optimizer state
+    (1.0 for plain optimizers — exact no-op; the fp16 mixed_precision
+    wrapper unscales gradients and skips overflowed steps)."""
+    from repro.precision import read_loss_scale
+
+    def loss_for(params, mb, scale):
         logits, aux = M.forward(cfg, params, mb, remat=True,
                                 shard_x=seq_shard_fn)
         logits = _split_vlm_logits(cfg, logits)
         loss, metrics = losses.train_objective(cfg, logits, mb["labels"], aux)
-        return loss, metrics
+        return loss * scale, metrics
 
     grad_fn = jax.value_and_grad(loss_for, has_aux=True)
 
@@ -86,8 +91,10 @@ def build_train_step(cfg: ModelConfig, opt, *, accum: int = 1,
             grads, grad_pspecs)
 
     def train_step(params, opt_state, batch):
+        scale = read_loss_scale(opt_state)
         if accum == 1:
-            (loss, metrics), grads = grad_fn(params, batch)
+            (loss, metrics), grads = grad_fn(params, batch, scale)
+            loss = loss / scale
             grads = constrain_grads(grads)
         else:
             mbs = jax.tree_util.tree_map(
@@ -95,7 +102,7 @@ def build_train_step(cfg: ModelConfig, opt, *, accum: int = 1,
                 batch)
 
             def body(acc, mb):
-                (l, m), g = grad_fn(params, mb)
+                (l, m), g = grad_fn(params, mb, scale)
                 g = constrain_grads(g)
                 acc = jax.tree_util.tree_map(
                     lambda a, gi: a + gi.astype(a.dtype), acc, g)
@@ -105,13 +112,13 @@ def build_train_step(cfg: ModelConfig, opt, *, accum: int = 1,
                 lambda p: jnp.zeros(p.shape, accum_dtype), params)
             gsum, (ls, ms) = jax.lax.scan(body, zeros, mbs)
             grads = jax.tree_util.tree_map(lambda g: (g / accum), gsum)
-            loss = ls.mean()
+            loss = ls.mean() / scale
             metrics = jax.tree_util.tree_map(lambda m: m.mean(), ms)
         new_params, new_state = opt.update(grads, opt_state, params)
         metrics = dict(metrics)
         metrics["grad_norm"] = jnp.sqrt(sum(
             jnp.sum(jnp.square(g.astype(jnp.float32)))
-            for g in jax.tree_util.tree_leaves(grads)))
+            for g in jax.tree_util.tree_leaves(grads))) / scale
         return new_params, new_state, metrics
 
     return train_step

@@ -42,10 +42,27 @@ def main():
     ap.add_argument("--mode", default="baseline", choices=["baseline", "pnn"])
     ap.add_argument("--stages", type=int, default=2)
     ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--precision", default=None,
+                    choices=["fp32", "bf16", "fp16"],
+                    help="precision policy: compute dtype for activations/"
+                         "caches, fp32 accumulation, loss scaling + master "
+                         "weights under fp16 (default: the arch config's "
+                         "dtype)")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches per step "
+                         "(fp32 accumulators inside the jitted step)")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
     cfg = get(args.arch, smoke=args.smoke)
+    prec = None
+    if args.precision:
+        from repro.precision import get_policy
+        prec = get_policy(args.precision)
+        cfg = prec.apply_to_model(cfg)
+        print(f"precision={prec.name}: compute={cfg.dtype} "
+              f"params={cfg.param_dtype} accum=float32 "
+              f"loss_scale={'dynamic' if prec.dynamic_scale else prec.loss_scale}")
     n_dev = len(jax.devices())
     use_mesh = n_dev >= 256
     print(f"arch={cfg.name} devices={n_dev} "
@@ -79,12 +96,13 @@ def main():
                 "or on a full slice.")
         plan = partition.make_plan(cfg, args.stages)
         spec = TrainSpec(
-            n_stages=args.stages, kappa=1.0,
+            n_stages=args.stages, kappa=1.0, precision=args.precision,
             stages=tuple(StageSpec(steps=args.steps // args.stages,
-                                   lr=args.lr, optimizer="adamw")
+                                   lr=args.lr, optimizer="adamw",
+                                   accum=args.accum)
                          for _ in range(args.stages)),
             recovery=StageSpec(steps=args.steps // 4, lr=args.lr / 10,
-                               optimizer="adamw"))
+                               optimizer="adamw", accum=args.accum))
         params, hist = recipes.run_lm_sequential(
             cfg, plan, params, next_batch, spec, jax.random.PRNGKey(1),
             shard_x=shard_fn, grad_pspecs_fn=pspecs_fn)
@@ -93,25 +111,41 @@ def main():
     else:
         opt_name = pick_optimizer_name(cfg) if not args.smoke else "adamw"
         opt = make_optimizer(opt_name, cosine_warmup(args.lr, 10, args.steps))
+        wrapped = prec is not None and prec.wraps_optimizer
+        if wrapped:
+            from repro.optim import mixed_precision
+            opt = mixed_precision(opt, loss_scale=prec.loss_scale,
+                                  dynamic=prec.dynamic_scale,
+                                  growth_interval=prec.scale_growth_interval)
         state = opt.init(params)
         shape = InputShape("cli", args.seq, args.batch, "train")
         if use_mesh:
             mesh = make_production_mesh()
             policy = Policy(cfg, mesh)
-            accum = pick_accum(cfg, shape, policy)
+            # an explicit --accum wins; otherwise the memory-aware default
+            accum = args.accum if args.accum > 1 \
+                else pick_accum(cfg, shape, policy)
             shard_fn = _shard_x_fn(cfg, policy, args.batch, args.seq) \
                 if args.seq_shard else None
             step = build_train_step(cfg, opt, accum=accum,
                                     seq_shard_fn=shard_fn)
             p_sh = policy.params_shardings(params)
             o_sh = policy.opt_state_shardings(opt_name, params)
+            if wrapped:
+                # the mixed_precision wrapper nests the inner state and adds
+                # replicated scalars (+ fp32 masters mirroring the params)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                rep = NamedSharding(mesh, P())
+                o_sh = {"inner": o_sh, "loss_scale": rep, "good_steps": rep}
+                if "master" in state:
+                    o_sh["master"] = p_sh
             step_fn = jax.jit(step, in_shardings=(p_sh, o_sh, None),
                               out_shardings=(p_sh, o_sh, None),
                               donate_argnums=(0, 1))
             params = jax.device_put(params, p_sh)
             state = jax.device_put(state, o_sh)
         else:
-            step_fn = jax.jit(build_train_step(cfg, opt, accum=1))
+            step_fn = jax.jit(build_train_step(cfg, opt, accum=args.accum))
         t0 = time.time()
         for i in range(args.steps):
             params, state, metrics = step_fn(params, state, next_batch(i))

@@ -45,10 +45,23 @@ def dense_init(key, d_in, d_out, dtype, bias=False, scale=None):
 
 
 def dense(p, x):
+    """Promote-at-boundary matmul: the weight is cast to the activation's
+    (compute) dtype right at the op — params keep their storage dtype, the
+    cast is never persisted (repro.precision policy contract)."""
     y = x @ p["w"].astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y
+
+
+def residual_add(x, out):
+    """Residual adds accumulate in fp32 and round once back to the compute
+    dtype (PrecisionPolicy.accum_dtype contract).  For a single binary add
+    this matches hardware behavior bit-for-bit; it guards the chained
+    attention+cross+ffn adds against double rounding under bf16/fp16."""
+    if x.dtype == jnp.float32:
+        return x + out
+    return (x.astype(jnp.float32) + out.astype(jnp.float32)).astype(x.dtype)
 
 
 # --------------------------------------------------------------------------

@@ -49,11 +49,21 @@ def init_params(cfg: MLPConfig, key) -> List[dict]:
 
 
 def forward_range(cfg: MLPConfig, params: Sequence[dict], x, lo: int, hi: int,
-                  *, final_identity: bool = True):
+                  *, final_identity: bool = True, compute_dtype=None):
     """Apply layers [lo, hi). ReLU after every layer except the network's last
-    (identity, per the paper)."""
+    (identity, per the paper).
+
+    compute_dtype: optional mixed-precision compute dtype (repro.precision):
+    inputs and weights are cast to it at each matmul boundary while the
+    stored params stay fp32.  None (default) is the paper-exact fp32 path.
+    """
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
     for i in range(lo, hi):
-        x = x @ params[i - lo]["w"] + params[i - lo]["b"]
+        w, b = params[i - lo]["w"], params[i - lo]["b"]
+        if compute_dtype is not None:
+            w, b = w.astype(compute_dtype), b.astype(compute_dtype)
+        x = x @ w + b
         if i < cfg.n_layers - 1 or not final_identity:
             x = jax.nn.relu(x)
     return x

@@ -149,9 +149,10 @@ def encode_audio(cfg, params, frames):
         sp = pgroup["slot_0"]
         h = L.norm_apply(sp["norm1"], x)
         out, _ = L.attention_apply(sp["attn"], h, cfg, rope_cs=None, causal=False)
-        x = x + out
+        x = L.residual_add(x, out)
         if "norm2" in sp:
-            x = x + L.mlp_apply(sp["mlp"], L.norm_apply(sp["norm2"], x))
+            x = L.residual_add(
+                x, L.mlp_apply(sp["mlp"], L.norm_apply(sp["norm2"], x)))
         return (x,), None
 
     (x,), _ = jax.lax.scan(body, (x,), params["encoder"])
@@ -204,12 +205,12 @@ def _apply_slot_full(cfg, sp, kind, is_moe, has_ffn, x, rope_cs, enc_out,
         out, st = L.slstm_apply(sp["slstm"], h, cfg)
         if collect_cache:
             cache["h"], cache["c"], cache["sn"], cache["m"] = st
-    x = x + out
+    x = L.residual_add(x, out)
     if cfg.enc_dec and enc_out is not None:
         hx = L.norm_apply(sp["norm_x"], x)
         outx, (ck, cv) = L.attention_apply(sp["cross"], hx, cfg,
                                            kv_override=enc_out)
-        x = x + outx
+        x = L.residual_add(x, outx)
         if collect_cache:
             cache["cross_k"], cache["cross_v"] = ck, cv
     if has_ffn:
@@ -221,7 +222,7 @@ def _apply_slot_full(cfg, sp, kind, is_moe, has_ffn, x, rope_cs, enc_out,
             aux = {k2: aux[k2] + a[k2] for k2 in aux}
         else:
             out2 = L.mlp_apply(sp["mlp"], h2)
-        x = x + out2
+        x = L.residual_add(x, out2)
     return x, aux, (cache if collect_cache else None)
 
 
@@ -249,13 +250,13 @@ def _apply_slot_decode(cfg, sp, kind, is_moe, has_ffn, x, rope_cs, pos,
             sp["slstm"], h, cfg,
             (cache_slot["h"], cache_slot["c"], cache_slot["sn"], cache_slot["m"]))
         new_cache["h"], new_cache["c"], new_cache["sn"], new_cache["m"] = st
-    x = x + out
+    x = L.residual_add(x, out)
     if cfg.enc_dec:
         hx = L.norm_apply(sp["norm_x"], x)
         outx, _ = L.attention_decode(
             sp["cross"], hx, cfg, None, pos,
             cross_kv=(cache_slot["cross_k"], cache_slot["cross_v"]))
-        x = x + outx
+        x = L.residual_add(x, outx)
     if has_ffn:
         h2 = L.norm_apply(sp["norm2"], x)
         if is_moe:
@@ -264,7 +265,7 @@ def _apply_slot_decode(cfg, sp, kind, is_moe, has_ffn, x, rope_cs, pos,
                                   gather_weights=cfg.moe_gather_weights)
         else:
             out2 = L.mlp_apply(sp["mlp"], h2)
-        x = x + out2
+        x = L.residual_add(x, out2)
     return x, new_cache
 
 

@@ -1,3 +1,4 @@
 from .optimizers import (  # noqa: F401
-    Optimizer, sgd_momentum, adamw, adafactor, make_optimizer)
+    Optimizer, sgd_momentum, adamw, adafactor, make_optimizer,
+    mixed_precision)
 from .schedules import constant, cosine_warmup  # noqa: F401

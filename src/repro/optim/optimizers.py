@@ -27,19 +27,25 @@ def _tree_map(f, *trees):
 
 
 def sgd_momentum(lr=0.01, momentum=0.9, weight_decay=0.0) -> Optimizer:
+    """SGD+momentum with fp32 momentum and fp32 update math (bit-identical
+    to the historical behavior for fp32 params; half-precision params get
+    the same fp32 accumulate-then-round treatment as adamw/adafactor)."""
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
     def init(params):
-        return {"mu": _tree_map(jnp.zeros_like, params),
+        return {"mu": _tree_map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                params),
                 "count": jnp.zeros((), jnp.int32)}
 
     def update(grads, state, params):
         step_lr = lr_fn(state["count"])
         if weight_decay:
             grads = _tree_map(lambda g, p: g + weight_decay * p, grads, params)
-        mu = _tree_map(lambda m, g: momentum * m + g, state["mu"], grads)
+        mu = _tree_map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                       state["mu"], grads)
         new_params = _tree_map(
-            lambda p, m: (p - step_lr * m).astype(p.dtype), params, mu)
+            lambda p, m: (p.astype(jnp.float32) - step_lr * m).astype(p.dtype),
+            params, mu)
         return new_params, {"mu": mu, "count": state["count"] + 1}
 
     return Optimizer(init, update, "sgdm")
@@ -132,6 +138,85 @@ def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_threshold=1.0,
         return new_params, {"v": new_v, "count": c}
 
     return Optimizer(init, update, "adafactor")
+
+
+def _finite_tree(tree):
+    """Scalar bool: every element of every leaf is finite."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.bool_(True)
+    return jnp.stack([jnp.all(jnp.isfinite(g)) for g in leaves]).all()
+
+
+def mixed_precision(inner: Optimizer, *, loss_scale: float = 1.0,
+                    dynamic: bool = False,
+                    growth_interval: int = 200) -> Optimizer:
+    """Loss-scaling + fp32-master-weight wrapper (repro.precision policies).
+
+    Contract: the step builder computes gradients of ``loss *
+    state["loss_scale"]`` (see ``precision.read_loss_scale``); this wrapper
+    unscales them in fp32, applies the inner optimizer to fp32 master weights
+    (materialized only when params are stored in half precision), and casts
+    the result back to the params' storage dtype.
+
+    With ``dynamic=True`` a step whose unscaled gradients contain inf/nan is
+    skipped entirely (params, inner state untouched) and the scale halves;
+    after ``growth_interval`` consecutive clean steps it doubles.  With
+    ``loss_scale=1`` and fp32 params the wrapper is bit-exact with the inner
+    optimizer (dividing by 1.0 and selecting on an always-true predicate are
+    exact) — verified by tests/test_precision.py.
+    """
+
+    def needs_master(params):
+        return any(jnp.issubdtype(p.dtype, jnp.floating)
+                   and p.dtype != jnp.float32
+                   for p in jax.tree_util.tree_leaves(params))
+
+    def init(params):
+        state = {"loss_scale": jnp.float32(loss_scale),
+                 "good_steps": jnp.zeros((), jnp.int32)}
+        if needs_master(params):
+            state["master"] = _tree_map(
+                lambda p: p.astype(jnp.float32)
+                if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+            state["inner"] = inner.init(state["master"])
+        else:
+            state["inner"] = inner.init(params)
+        return state
+
+    def update(grads, state, params):
+        scale = state["loss_scale"]
+        g = _tree_map(lambda x: x.astype(jnp.float32) / scale, grads)
+        finite = _finite_tree(g)
+        # inner update always runs (jit-safe); non-finite steps are selected
+        # away below, and the zeroed grads keep the inner math finite
+        g_safe = _tree_map(lambda x: jnp.where(finite, x, 0.0), g)
+        master = state.get("master", params)
+        new_master, new_inner = inner.update(g_safe, state["inner"], master)
+        new_master = _tree_map(lambda n, o: jnp.where(finite, n, o),
+                               new_master, master)
+        new_inner = _tree_map(lambda n, o: jnp.where(finite, n, o),
+                              new_inner, state["inner"])
+        if dynamic:
+            good = jnp.where(finite, state["good_steps"] + 1, 0)
+            grow = finite & (good >= growth_interval)
+            new_scale = jnp.where(
+                grow, scale * 2.0,
+                jnp.where(finite, scale, jnp.maximum(scale * 0.5, 1.0)))
+            good = jnp.where(grow, 0, good)
+        else:
+            new_scale, good = scale, state["good_steps"]
+        new_state = {"inner": new_inner, "loss_scale": new_scale,
+                     "good_steps": good}
+        if "master" in state:
+            new_state["master"] = new_master
+            new_params = _tree_map(lambda m, p: m.astype(p.dtype),
+                                   new_master, params)
+        else:
+            new_params = new_master
+        return new_params, new_state
+
+    return Optimizer(init, update, f"mp({inner.name})")
 
 
 def make_optimizer(name: str, lr, **kw) -> Optimizer:

@@ -1,0 +1,183 @@
+"""End-to-end mixed-precision policy (param / compute / accum dtypes).
+
+One ``PrecisionPolicy`` is the single source of truth for numerics across the
+train and serve hot paths:
+
+* **param_dtype** — storage dtype of the weights (``ModelConfig.param_dtype``).
+  Under the built-in policies params stay fp32; the fp16 policy keeps fp32
+  *master* weights inside the optimizer wrapper when params are stored half.
+* **compute_dtype** — activations, matmul inputs, KV/state caches, and SIL
+  boundary spills.  Weights are cast to it at each matmul boundary (the
+  promote-at-boundary idiom: the cast happens next to the op that needs it,
+  never persisted).
+* **accum_dtype** — loss/metric accumulation, gradient accumulation across
+  microbatches, optimizer moments, norm statistics, softmax/attention logits,
+  and residual adds.  Always fp32 in the built-in policies.
+
+``loss_scale`` / ``dynamic_scale`` configure (dynamic) loss scaling for
+fp16 — gradients are computed on ``loss * scale`` and unscaled inside the
+``repro.optim.mixed_precision`` wrapper, which also skips steps whose
+unscaled gradients are non-finite.  bf16 shares fp32's exponent range, so the
+bf16 policy runs with scale 1 (a mathematical no-op kept bit-exact).
+
+Invariants enforced by tests/test_precision.py:
+
+* params keep ``param_dtype`` through any number of steps under any policy
+* norms, softmax/attention logits, and residual adds accumulate in fp32
+* ``loss_scale=1`` gradients bit-match the unscaled step
+* the Pallas kernels accept compute-dtype inputs with fp32 accumulators
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+# itemsize by dtype string, resolvable without importing ml_dtypes-aware
+# numpy (np.dtype("bfloat16") raises on plain numpy)
+_ITEMSIZE = {
+    "float64": 8, "float32": 4, "float16": 2, "bfloat16": 2,
+    "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+
+def dtype_itemsize(dtype: Union[str, jnp.dtype]) -> int:
+    """Bytes per element for a dtype given as string or jnp dtype."""
+    s = str(dtype)
+    if s in _ITEMSIZE:
+        return _ITEMSIZE[s]
+    return jnp.dtype(dtype).itemsize
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    """param/compute/accum dtypes + loss-scaling knobs (see module doc)."""
+    name: str = "fp32"
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    accum_dtype: str = "float32"
+    # loss scaling (fp16): grads are computed on loss * loss_scale and
+    # unscaled in the optimizer wrapper; dynamic_scale halves on overflow and
+    # doubles after scale_growth_interval clean steps
+    loss_scale: float = 1.0
+    dynamic_scale: bool = False
+    scale_growth_interval: int = 200
+
+    # -- dtypes ------------------------------------------------------------
+
+    @property
+    def param_jnp(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def compute_jnp(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def accum_jnp(self):
+        return jnp.dtype(self.accum_dtype)
+
+    @property
+    def compute_itemsize(self) -> int:
+        return dtype_itemsize(self.compute_dtype)
+
+    @property
+    def param_itemsize(self) -> int:
+        return dtype_itemsize(self.param_dtype)
+
+    @property
+    def wraps_optimizer(self) -> bool:
+        """Whether the step needs the mixed_precision optimizer wrapper
+        (loss scaling and/or fp32 master weights for half-precision params)."""
+        return (self.loss_scale != 1.0 or self.dynamic_scale
+                or self.param_jnp != jnp.float32)
+
+    # -- casts -------------------------------------------------------------
+
+    def cast_compute(self, tree):
+        """Cast floating leaves to compute_dtype (ints/bools untouched)."""
+        return cast_floating(tree, self.compute_jnp)
+
+    def cast_param(self, tree):
+        return cast_floating(tree, self.param_jnp)
+
+    def cast_accum(self, tree):
+        return cast_floating(tree, self.accum_jnp)
+
+    # -- config threading --------------------------------------------------
+
+    def apply_to_model(self, cfg):
+        """ModelConfig with activations in this policy's compute dtype.
+
+        param_dtype is left as the config declares it — storage precision is
+        an architecture decision (grok/jamba ship bf16 checkpoints), compute
+        precision is a launch decision."""
+        if cfg.dtype == self.compute_dtype:
+            return cfg
+        return cfg.replace(dtype=self.compute_dtype)
+
+
+PRESETS = {
+    "fp32": PrecisionPolicy(name="fp32"),
+    "bf16": PrecisionPolicy(name="bf16", compute_dtype="bfloat16"),
+    # fp16 needs loss scaling: 5 exponent bits underflow activations-scale
+    # gradients long before bf16 would
+    "fp16": PrecisionPolicy(name="fp16", compute_dtype="float16",
+                            loss_scale=float(2 ** 15), dynamic_scale=True),
+}
+
+
+def get_policy(p: Union[None, str, PrecisionPolicy],
+               default: str = "fp32") -> PrecisionPolicy:
+    """Resolve a policy from a preset name / policy / None (-> default)."""
+    if p is None:
+        p = default
+    if isinstance(p, PrecisionPolicy):
+        return p
+    try:
+        return PRESETS[p]
+    except KeyError:
+        raise ValueError(f"unknown precision {p!r}; "
+                         f"presets: {sorted(PRESETS)}") from None
+
+
+def policy_for(cfg) -> PrecisionPolicy:
+    """Derive the policy a ModelConfig is effectively running (its dtype /
+    param_dtype fields), for memory accounting."""
+    return replace(PRESETS["fp32"], name="derived",
+                   compute_dtype=cfg.dtype, param_dtype=cfg.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# tree helpers
+# --------------------------------------------------------------------------
+
+def cast_floating(tree, dtype):
+    """Cast every inexact leaf of a pytree to `dtype`; other leaves pass
+    through (labels/masks/counters keep their integer dtypes)."""
+    dtype = jnp.dtype(dtype)
+
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact) \
+                and x.dtype != dtype:
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(cast, tree)
+
+
+def read_loss_scale(opt_state):
+    """The live loss scale carried in a mixed_precision optimizer state
+    (1.0 for unwrapped optimizers) — step builders multiply the loss by this
+    so gradients arrive pre-scaled at ``opt.update``."""
+    if isinstance(opt_state, dict) and "loss_scale" in opt_state:
+        return opt_state["loss_scale"]
+    return 1.0
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (policy-visible memory accounting)."""
+    return sum(x.size * dtype_itemsize(x.dtype)
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))

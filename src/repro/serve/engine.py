@@ -49,7 +49,14 @@ class Engine:
 
     def __init__(self, cfg, params=None, *, key=None, max_slots: int = 4,
                  decode_block: int = 16, plan=None, stage_params=None,
-                 policy=None):
+                 policy=None, precision=None):
+        """precision: optional repro.precision preset name or PrecisionPolicy
+        — re-dtypes the serving compute path (activations + the slot cache
+        pool run in the policy's compute dtype; params keep their storage
+        dtype; sampling always sees fp32 logits)."""
+        if precision is not None:
+            from repro.precision import get_policy
+            cfg = get_policy(precision).apply_to_model(cfg)
         if (plan is None) != (stage_params is None):
             raise ValueError("pass plan= and stage_params= together")
         if params is not None and stage_params is not None:
@@ -115,8 +122,10 @@ class Engine:
                                                        cache_len)
             k0s, s0s = sampling.split_keys(
                 jax.vmap(sampling.make_key)(seeds))
-            t0 = sampling.sample_tokens(logits[:, :vs], s0s, g_temps, g_tks,
-                                        g_tps, mode=mode)
+            # sampling always runs on fp32 logits regardless of the cache /
+            # activation compute dtype (precision-policy contract)
+            t0 = sampling.sample_tokens(logits[:, :vs].astype(jnp.float32),
+                                        s0s, g_temps, g_tks, g_tps, mode=mode)
             pool_cache = place_rows(pool_cache, group_cache, slots)
             tok = tok.at[slots].set(t0)
             pos = pos.at[slots].set(p1)
@@ -145,8 +154,9 @@ class Engine:
                     keys, sub = sampling.split_keys(keys)
                 else:
                     sub = keys
-                tok = sampling.sample_tokens(logits[:, :vs], sub, temps,
-                                             tks, tps, mode=mode)
+                tok = sampling.sample_tokens(
+                    logits[:, :vs].astype(jnp.float32), sub, temps, tks, tps,
+                    mode=mode)
                 return (cache, tok, pos + 1, keys), tok
 
             (cache, tok, pos, keys), toks = jax.lax.scan(

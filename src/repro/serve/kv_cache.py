@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 
 from repro.models import model as M
+from repro.precision import tree_bytes
 
 
 def place_rows(pool_cache, group_cache, slots):
@@ -33,7 +34,15 @@ class CachePool:
         self.cfg = cfg
         self.n_slots = n_slots
         self.cache_len = cache_len
+        # KV/conv leaves follow cfg.dtype (the precision policy's compute
+        # dtype — bf16 halves the pool); recurrent carries (ssm/xLSTM/sLSTM
+        # states) stay fp32, they are accumulators, not streams
         self.cache = M.init_cache(cfg, n_slots, cache_len)
         if policy is not None:
             self.cache = jax.device_put(
                 self.cache, policy.cache_shardings(self.cache, n_slots))
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes of the pool (dtype-aware memory accounting)."""
+        return tree_bytes(self.cache)

@@ -26,10 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import precision as precision_lib
 from repro.core import losses, partition, sil as sil_lib
 from repro.models import mlp as MLP
 from repro.models import model as M
-from repro.optim import make_optimizer
+from repro.optim import make_optimizer, mixed_precision
 
 from repro.train.spec import StageSpec, TrainSpec
 
@@ -44,9 +45,57 @@ def _copy_tree(tree):
     return jax.tree_util.tree_map(jnp.copy, tree)
 
 
-def make_optimizer_for(hp: StageSpec):
+def resolve_policy(hp=None, spec=None):
+    """The explicitly-requested PrecisionPolicy for a stage (StageSpec
+    override first, then the TrainSpec-wide default), or None — None keeps
+    the legacy numerics exactly (MLP backend fp32; LM backend whatever the
+    ModelConfig's dtype says)."""
+    p = getattr(hp, "precision", None) if hp is not None else None
+    if p is None and spec is not None:
+        p = getattr(spec, "precision", None)
+    return None if p is None else precision_lib.get_policy(p)
+
+
+def make_optimizer_for(hp: StageSpec, spec: Optional[TrainSpec] = None):
     kw = {"momentum": hp.momentum} if hp.optimizer == "sgdm" else {}
-    return make_optimizer(hp.optimizer, hp.lr, **kw)
+    opt = make_optimizer(hp.optimizer, hp.lr, **kw)
+    pol = resolve_policy(hp, spec)
+    if pol is not None and pol.wraps_optimizer:
+        opt = mixed_precision(opt, loss_scale=pol.loss_scale,
+                              dynamic=pol.dynamic_scale,
+                              growth_interval=pol.scale_growth_interval)
+    return opt
+
+
+def value_and_accum_grads(loss_fn, params, args, accum: int,
+                          accum_dtype=jnp.float32):
+    """(mean loss, grads) of ``loss_fn(params, *args)`` with the batch split
+    into ``accum`` microbatches inside the (caller-jitted) step; gradients
+    accumulate in ``accum_dtype`` (fp32) regardless of the compute dtype.
+    ``accum=1`` is the exact legacy single-shot path."""
+    grad_fn = jax.value_and_grad(loss_fn)
+    if accum <= 1:
+        return grad_fn(params, *args)
+
+    def fold(a):
+        if a.shape[0] % accum:
+            raise ValueError(f"batch dim {a.shape[0]} not divisible by "
+                             f"accum={accum}")
+        return a.reshape((accum, a.shape[0] // accum) + a.shape[1:])
+
+    mbs = jax.tree_util.tree_map(fold, args)
+
+    def body(acc, mb):
+        loss, g = grad_fn(params, *mb)
+        acc = jax.tree_util.tree_map(
+            lambda a, gi: a + gi.astype(a.dtype), acc, g)
+        return acc, loss
+
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    gsum, mb_losses = jax.lax.scan(body, zeros, mbs)
+    grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+    return mb_losses.mean(), grads
 
 
 def scanned_epoch_fn(step):
@@ -95,6 +144,11 @@ class MLPBackend:
                  bounds: Optional[Sequence[Tuple[int, int]]] = None):
         self.cfg = cfg
         self.spec = spec
+        # spec-wide policy; None = legacy fp32-everything (bit-exact).
+        # Per-stage StageSpec.precision overrides only affect the optimizer
+        # wrapper (built in phases via make_optimizer_for) — the forward
+        # compute dtype is a backend-wide choice
+        self.policy = resolve_policy(None, spec)
         tx, ty, vx, vy = data
         self._tx = jnp.asarray(tx)
         self._ty = jnp.asarray(ty)
@@ -180,64 +234,80 @@ class MLPBackend:
 
     # -- step builders -----------------------------------------------------
 
-    def _range_forward(self, p, x, b0, b1):
-        return MLP.forward_range(self.cfg, p, x, b0, b1)
+    def _compute_dtype(self):
+        return None if self.policy is None else self.policy.compute_jnp
 
-    def build_sil_step(self, k: int, opt, sil):
+    def _range_forward(self, p, x, b0, b1):
+        return MLP.forward_range(self.cfg, p, x, b0, b1,
+                                 compute_dtype=self._compute_dtype())
+
+    def _cast_in(self, x):
+        """Inputs enter the network in the compute dtype (no-op legacy)."""
+        return x if self.policy is None else self.policy.cast_compute(x)
+
+    def _finish_step(self, opt, loss_fn, p, st, args, accum: int):
+        """Shared tail of every MLP step: (scaled) grads — accumulated over
+        `accum` microbatches in fp32 — into the optimizer; the returned loss
+        is unscaled.  accum=1 / no policy is the exact legacy path."""
+        scale = precision_lib.read_loss_scale(st)
+
+        def scaled(p_, *a):
+            return loss_fn(p_, *a) * scale
+        loss, grads = value_and_accum_grads(scaled, p, args, accum)
+        p2, st2 = opt.update(grads, st, p)
+        return p2, st2, loss / scale
+
+    def build_sil_step(self, k: int, opt, sil, accum: int = 1):
         b0, b1 = self.bounds[k]
 
         def step(p, st, x, y):
-            def loss_fn(p_):
-                h = self._range_forward(p_, x, b0, b1)
-                return losses.sil_stage_loss(h, sil, y)
-            loss, grads = jax.value_and_grad(loss_fn)(p)
-            p2, st2 = opt.update(grads, st, p)
-            return p2, st2, loss
+            def loss_fn(p_, xb, yb):
+                h = self._range_forward(p_, xb, b0, b1)
+                return losses.sil_stage_loss(h, sil, yb)
+            return self._finish_step(opt, loss_fn, p, st,
+                                     (self._cast_in(x), y), accum)
         return step
 
-    def build_ce_step(self, k: int, opt):
+    def build_ce_step(self, k: int, opt, accum: int = 1):
         """CE through stage k alone (its input is the stage boundary)."""
         b0, b1 = self.bounds[k]
 
         def step(p, st, h, y):
-            def loss_fn(p_):
-                logits = self._range_forward(p_, h, b0, b1)
-                return losses.cross_entropy(logits, y)
-            loss, grads = jax.value_and_grad(loss_fn)(p)
-            p2, st2 = opt.update(grads, st, p)
-            return p2, st2, loss
+            def loss_fn(p_, hb, yb):
+                logits = self._range_forward(p_, hb, b0, b1)
+                return losses.cross_entropy(logits, yb)
+            return self._finish_step(opt, loss_fn, p, st,
+                                     (self._cast_in(h), y), accum)
         return step
 
-    def build_baseline_step(self, opt):
+    def build_baseline_step(self, opt, accum: int = 1):
         cfg = self.cfg
 
         def step(p, st, x, y):
-            def loss_fn(p_):
-                logits = MLP.forward_range(cfg, p_, x, 0, cfg.n_layers)
-                return losses.cross_entropy(logits, y)
-            loss, grads = jax.value_and_grad(loss_fn)(p)
-            p2, st2 = opt.update(grads, st, p)
-            return p2, st2, loss
+            def loss_fn(p_, xb, yb):
+                logits = self._range_forward(p_, xb, 0, cfg.n_layers)
+                return losses.cross_entropy(logits, yb)
+            return self._finish_step(opt, loss_fn, p, st,
+                                     (self._cast_in(x), y), accum)
         return step
 
-    def build_recovery_step(self, j: int, frozen: list, opt):
+    def build_recovery_step(self, j: int, frozen: list, opt, accum: int = 1):
         """End-to-end CE training of stage j with every other stage frozen
         (paper §5 for j=0)."""
         bounds = self.bounds
 
         def step(pj, st, x, y):
-            def loss_fn(pj_):
-                h = x
+            def loss_fn(pj_, xb, yb):
+                h = xb
                 for k, (b0, b1) in enumerate(bounds):
                     p = pj_ if k == j else jax.lax.stop_gradient(frozen[k])
                     h = self._range_forward(p, h, b0, b1)
-                return losses.cross_entropy(h, y)
-            loss, grads = jax.value_and_grad(loss_fn)(pj)
-            pj2, st2 = opt.update(grads, st, pj)
-            return pj2, st2, loss
+                return losses.cross_entropy(h, yb)
+            return self._finish_step(opt, loss_fn, pj, st,
+                                     (self._cast_in(x), y), accum)
         return step
 
-    def build_parallel_step(self, k: int, opt, sils):
+    def build_parallel_step(self, k: int, opt, sils, accum: int = 1):
         """Fig.-5 stage step: interior stages consume SIL_{k-1}[:, y] and
         regress to SIL_k[:, y]; the last trains with CE; stage 0 consumes
         the real batch.  The synthetic input is looked up inside the jitted
@@ -246,28 +316,32 @@ class MLPBackend:
         last = k == self.n_stages - 1
 
         def step(p, st, x, y):
-            def loss_fn(p_):
-                xin = x if k == 0 else sil_lib.sil_lookup(sils[k - 1], y)
-                h = self._range_forward(p_, xin, b0, b1)
+            def loss_fn(p_, xb, yb):
+                xin = xb if k == 0 else sil_lib.sil_lookup(sils[k - 1], yb)
+                h = self._range_forward(p_, self._cast_in(xin), b0, b1)
                 if last:
-                    return losses.cross_entropy(h, y)
-                return losses.sil_stage_loss(h, sils[k], y)
-            loss, grads = jax.value_and_grad(loss_fn)(p)
-            p2, st2 = opt.update(grads, st, p)
-            return p2, st2, loss
+                    return losses.cross_entropy(h, yb)
+                return losses.sil_stage_loss(h, sils[k], yb)
+            return self._finish_step(opt, loss_fn, p, st, (x, y), accum)
         return step
 
     # -- prefix / eval -----------------------------------------------------
 
+    def boundary_dtype(self):
+        """Storage dtype for materialized boundary activations — the policy's
+        compute dtype (halving the memmap spill under bf16)."""
+        return np.dtype(jnp.float32) if self.policy is None \
+            else np.dtype(self.policy.compute_jnp)
+
     def prefix_forward(self, k: int):
         bounds = self.bounds
-        cfg = self.cfg
 
         @jax.jit
         def fwd(prefix: tuple, x):
+            x = self._cast_in(x)
             for j in range(k):
                 b0, b1 = bounds[j]
-                x = MLP.forward_range(cfg, prefix[j], x, b0, b1)
+                x = self._range_forward(prefix[j], x, b0, b1)
             return x
         return fwd
 
@@ -307,6 +381,12 @@ class LMBackend:
         `policy.params_shardings` (NamedShardings, usable outside a mesh
         context) so PNN stage steps run through the same plumbing as
         baseline training."""
+        # an explicit spec.precision re-dtypes the whole stage forward
+        # (activations, caches, boundary spills run in compute dtype);
+        # params keep cfg.param_dtype — see repro.precision
+        self.policy = resolve_policy(None, spec)
+        if self.policy is not None:
+            cfg = self.policy.apply_to_model(cfg)
         self.cfg = cfg
         self.plan = plan
         self.batch_fn = batch_fn
@@ -366,11 +446,22 @@ class LMBackend:
         train = {k: v for k, v in sp.items() if k != "tied_unembed"}
         return train, frozen
 
-    def build_stage_step(self, k: int, opt, sil, stage_params_struct=None):
+    def _cast_in(self, xin):
+        """Boundary inputs enter the stage in the compute dtype (handles
+        stale dtypes from caches materialized under another policy)."""
+        if self.policy is None:
+            return xin
+        return self.policy.cast_compute(xin)
+
+    def build_stage_step(self, k: int, opt, sil, stage_params_struct=None,
+                         accum: int = 1):
         """Train step for stage k: SIL-MSE on the boundary for interior
         stages, CE (+ MoE aux) through the real unembedding for the last.
         The frozen tied_unembed snapshot (if any) is carried outside the
-        differentiated tree — zero grad/optimizer-state cost."""
+        differentiated tree — zero grad/optimizer-state cost.  Gradients of
+        ``accum`` microbatches accumulate in fp32 inside the jitted step;
+        the loss is scaled by the live loss scale (1.0 unless the optimizer
+        is a mixed_precision fp16 wrapper)."""
         cfg, plan = self.cfg, self.plan
         last = k == self.n_stages - 1
         pspecs = self._grad_pspecs(self.trainable(stage_params_struct)) \
@@ -378,40 +469,44 @@ class LMBackend:
 
         def step(sp, st, xin, labels, mask=None):
             train, frozen = self._split_frozen(sp)
+            scale = precision_lib.read_loss_scale(st)
 
-            def loss_fn(p):
+            def loss_fn(p, xin, labels, mask):
                 out, aux = partition.stage_forward(cfg, plan, k,
                                                    {**p, **frozen}, xin,
                                                    shard_x=self.shard_x)
                 if last:
                     loss, _ = losses.train_objective(
                         cfg, self._trim_vision(out), labels, aux, mask)
-                    return loss
+                    return loss * scale
                 bound = out[0] if cfg.enc_dec else out
                 bound = self._trim_vision(bound)
                 loss = losses.sil_stage_loss(bound, sil, labels)
                 if cfg.moe is not None:
                     loss = loss + cfg.moe.load_balance_loss * aux["lb_loss"] \
                         + cfg.moe.router_z_loss * aux["z_loss"]
-                return loss
-            loss, grads = jax.value_and_grad(loss_fn)(train)
+                return loss * scale
+            loss, grads = value_and_accum_grads(
+                loss_fn, train, (self._cast_in(xin), labels, mask), accum)
             if pspecs is not None:
                 grads = jax.tree_util.tree_map(
                     lambda g, s: jax.lax.with_sharding_constraint(g, s),
                     grads, pspecs)
             new_train, st2 = opt.update(grads, st, train)
-            return {**new_train, **frozen}, st2, loss
+            return {**new_train, **frozen}, st2, loss / scale
 
         return self._jit_step(step)
 
-    def build_recovery_step(self, j: int, frozen_stages: list, opt):
+    def build_recovery_step(self, j: int, frozen_stages: list, opt,
+                            accum: int = 1):
         """End-to-end CE training of stage j, all other stages frozen."""
         cfg, plan = self.cfg, self.plan
 
         def step(pj, st, batch):
             train, snap = self._split_frozen(pj)
+            scale = precision_lib.read_loss_scale(st)
 
-            def loss_fn(pj_):
+            def loss_fn(pj_, batch):
                 x = batch
                 aux = {}
                 for k in range(self.n_stages):
@@ -422,14 +517,15 @@ class LMBackend:
                 loss, _ = losses.train_objective(
                     cfg, self._trim_vision(x), batch["labels"], aux,
                     batch.get("mask"))
-                return loss
-            loss, grads = jax.value_and_grad(loss_fn)(train)
+                return loss * scale
+            loss, grads = value_and_accum_grads(loss_fn, train, (batch,),
+                                                accum)
             new_train, st2 = opt.update(grads, st, train)
-            return {**new_train, **snap}, st2, loss
+            return {**new_train, **snap}, st2, loss / scale
 
         return self._jit_step(step)
 
-    def build_baseline_step(self, opt):
+    def build_baseline_step(self, opt, accum: int = 1):
         """Conventional end-to-end training of the UNPARTITIONED network
         (full joined param tree through M.forward — tied embeddings train
         with gradient flowing through the unembedding, exactly as outside
@@ -437,17 +533,24 @@ class LMBackend:
         cfg = self.cfg
 
         def step(params, st, batch):
-            def loss_fn(p):
+            scale = precision_lib.read_loss_scale(st)
+
+            def loss_fn(p, batch):
                 logits, aux = M.forward(cfg, p, batch, shard_x=self.shard_x)
                 loss, _ = losses.train_objective(
                     cfg, self._trim_vision(logits), batch["labels"], aux,
                     batch.get("mask"))
-                return loss
-            loss, grads = jax.value_and_grad(loss_fn)(params)
+                return loss * scale
+            loss, grads = value_and_accum_grads(loss_fn, params, (batch,),
+                                                accum)
             p2, st2 = opt.update(grads, st, params)
-            return p2, st2, loss
+            return p2, st2, loss / scale
 
         return self._jit_step(step)
+
+    def boundary_dtype(self):
+        """Storage dtype for materialized boundaries (= activation dtype)."""
+        return np.dtype(self.cfg.activation_dtype())
 
     def prefix_forward(self, k: int):
         """Jitted frozen forward of stages < k — the paper's sole

@@ -10,6 +10,12 @@ pulled from the accelerator; when the buffer would exceed
 ``spill_threshold_bytes`` (or a ``spill_dir`` is forced) it is backed by an
 on-disk ``np.memmap`` so production-sized materializations don't need to fit
 in host RAM.
+
+The buffer dtype is the caller's choice (``reserve(..., dtype)``);
+``BoundaryMaterializePhase`` passes the backend's ``boundary_dtype()`` — the
+precision policy's compute dtype — so a bf16 policy halves both the RAM
+buffer and the memmap spill (ml_dtypes registers bfloat16 with numpy, so
+memmaps of it work transparently).
 """
 from __future__ import annotations
 

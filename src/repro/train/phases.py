@@ -45,6 +45,8 @@ class PhaseBase:
     lr: Optional[float] = None
     optimizer: Optional[str] = None
     momentum: Optional[float] = None
+    accum: Optional[int] = None
+    precision: Optional[object] = None
     seed_base: int = 0
     needs_sil = False
 
@@ -55,7 +57,10 @@ class PhaseBase:
             lr=self.lr if self.lr is not None else base.lr,
             optimizer=self.optimizer or base.optimizer,
             momentum=self.momentum if self.momentum is not None
-            else base.momentum)
+            else base.momentum,
+            accum=self.accum if self.accum is not None else base.accum,
+            precision=self.precision if self.precision is not None
+            else base.precision)
 
 
 # ==========================================================================
@@ -68,12 +73,13 @@ class BaselinePhase(PhaseBase):
     def run(self, trainer, state) -> None:
         be = trainer.backend
         hp = self.resolve(trainer.spec.baseline or trainer.spec.stage(0))
-        opt = make_optimizer_for(hp)
+        opt = make_optimizer_for(hp, trainer.spec)
         if be.kind == "mlp":
             params = be.join(state.stage_params)
             opt_state = opt.init(params)
             params, _ = trainer.drive_epochs(
-                state, step=be.build_baseline_step(opt), train_params=params,
+                state, step=be.build_baseline_step(opt, accum=hp.accum),
+                train_params=params,
                 opt_state=opt_state, epochs=hp.epochs, phase_name=self.name,
                 stage=-1, macs_per_sample=be.full_macs(),
                 seed_base=self.seed_base, log_mode="cadence+last",
@@ -83,7 +89,7 @@ class BaselinePhase(PhaseBase):
             # true unpartitioned training: the full joined tree through
             # M.forward (tied embeddings receive unembedding gradients)
             params = be.join(state.stage_params)
-            step = be.build_baseline_step(opt)
+            step = be.build_baseline_step(opt, accum=hp.accum)
             opt_state = opt.init(params)
 
             def inputs(i):
@@ -114,7 +120,7 @@ class SilStagePhase(PhaseBase):
             raise ValueError("SilStagePhase is for interior stages; the last "
                              "stage trains with CE (FrozenPrefixPhase)")
         hp = self.resolve(trainer.spec.stage(k))
-        opt = make_optimizer_for(hp)
+        opt = make_optimizer_for(hp, trainer.spec)
         sil = state.sils[k]
         if be.kind == "mlp":
             if k != 0:
@@ -122,13 +128,14 @@ class SilStagePhase(PhaseBase):
                                  "(materialize the boundary for later stages)")
             opt_state = opt.init(state.stage_params[k])
             state.stage_params[k], _ = trainer.drive_epochs(
-                state, step=be.build_sil_step(k, opt, sil),
+                state, step=be.build_sil_step(k, opt, sil, accum=hp.accum),
                 train_params=state.stage_params[k], opt_state=opt_state,
                 epochs=hp.epochs, phase_name=self.name, stage=k,
                 macs_per_sample=be.stage_macs(k), seed_base=self.seed_base,
                 log_mode="cadence")
         else:
-            step = be.build_stage_step(k, opt, sil, state.stage_params[k])
+            step = be.build_stage_step(k, opt, sil, state.stage_params[k],
+                                       accum=hp.accum)
             opt_state = opt.init(be.trainable(state.stage_params[k]))
             prefix = be.prefix_forward(k) if k else None
             frozen = tuple(state.stage_params[:k])
@@ -178,7 +185,7 @@ class BoundaryMaterializePhase(PhaseBase):
             bx, by = be.epoch_arrays(seed=0, shuffle=False)
             nb, bs = bx.shape[0], bx.shape[1]
             cache.reserve(nb * bs, (be.boundary_width(self.upto - 1),),
-                          np.float32)
+                          be.boundary_dtype())
             for i in range(nb):
                 cache.append(fwd(frozen, bx[i]))
             labels = np.asarray(jax.device_get(by)).reshape(-1)
@@ -197,7 +204,7 @@ class BoundaryMaterializePhase(PhaseBase):
                 if hs is None:
                     b, s, d = h.shape
                     cache.reserve(self.n_batches * b, (s, d),
-                                  np.dtype(be.cfg.activation_dtype()))
+                                  be.boundary_dtype())
                     hs = True
                 cache.append(h)
                 labels.append(np.asarray(batch["labels"]))
@@ -238,15 +245,16 @@ class FrozenPrefixPhase(PhaseBase):
             raise ValueError("interior FrozenPrefixPhase needs SIL tables: "
                              "pass sils= or key= to Trainer.run")
         hp = self.resolve(trainer.spec.stage(k))
-        opt = make_optimizer_for(hp)
+        opt = make_optimizer_for(hp, trainer.spec)
         if hasattr(be, "before_stage_train"):
             be.before_stage_train(state.stage_params, k)
         if be.kind == "mlp":
             if self.source != "cache" or "h" not in state.boundary:
                 raise ValueError("MLP FrozenPrefixPhase needs a preceding "
                                  "BoundaryMaterializePhase")
-            step = be.build_ce_step(k, opt) if last \
-                else be.build_sil_step(k, opt, state.sils[k])
+            step = be.build_ce_step(k, opt, accum=hp.accum) if last \
+                else be.build_sil_step(k, opt, state.sils[k],
+                                       accum=hp.accum)
             h = jnp.asarray(state.boundary["h"].array())
             y = jnp.asarray(state.boundary["labels"])
 
@@ -262,7 +270,8 @@ class FrozenPrefixPhase(PhaseBase):
                 batch_arrays=batch_arrays)
         else:
             sil = None if last else state.sils[k]
-            step = be.build_stage_step(k, opt, sil, state.stage_params[k])
+            step = be.build_stage_step(k, opt, sil, state.stage_params[k],
+                                       accum=hp.accum)
             opt_state = opt.init(be.trainable(state.stage_params[k]))
             if self.source == "cache":
                 if "h" not in state.boundary:
@@ -312,10 +321,10 @@ class RecoveryPhase(PhaseBase):
         n = hp.epochs if be.kind == "mlp" else hp.steps
         if not n:
             return
-        opt = make_optimizer_for(hp)
+        opt = make_optimizer_for(hp, trainer.spec)
         frozen = list(state.stage_params)
         if be.kind == "mlp":
-            step = be.build_recovery_step(j, frozen, opt)
+            step = be.build_recovery_step(j, frozen, opt, accum=hp.accum)
             opt_state = opt.init(state.stage_params[j])
             state.stage_params[j], _ = trainer.drive_epochs(
                 state, step=step, train_params=state.stage_params[j],
@@ -323,7 +332,7 @@ class RecoveryPhase(PhaseBase):
                 stage=j, macs_per_sample=be.full_macs(),
                 seed_base=self.seed_base, log_mode="every")
         else:
-            step = be.build_recovery_step(j, frozen, opt)
+            step = be.build_recovery_step(j, frozen, opt, accum=hp.accum)
             opt_state = opt.init(be.trainable(state.stage_params[j]))
 
             def inputs(i):
@@ -359,11 +368,11 @@ class ParallelSilPhase(PhaseBase):
         be = trainer.backend
         hps = [self.resolve(trainer.spec.stage(k))
                for k in range(be.n_stages)]
-        opts = [make_optimizer_for(hp) for hp in hps]
+        opts = [make_optimizer_for(hp, trainer.spec) for hp in hps]
         opt_states = [opts[k].init(state.stage_params[k])
                       for k in range(be.n_stages)]
         epoch_fns = [scanned_epoch_fn(
-            be.build_parallel_step(k, opts[k], state.sils))
+            be.build_parallel_step(k, opts[k], state.sils, accum=hps[k].accum))
             for k in range(be.n_stages)]
         # epoch loop outside the stage loop: the (shuffled) epoch gather is
         # done once per epoch, shared by every independent stage
@@ -384,7 +393,7 @@ class ParallelSilPhase(PhaseBase):
         be = trainer.backend
         hps = [self.resolve(trainer.spec.stage(k))
                for k in range(be.n_stages)]
-        opts = [make_optimizer_for(hp) for hp in hps]
+        opts = [make_optimizer_for(hp, trainer.spec) for hp in hps]
         opt_states = [opts[k].init(be.trainable(state.stage_params[k]))
                       for k in range(be.n_stages)]
         steps = [be.build_stage_step(

@@ -25,6 +25,18 @@ class StageSpec:
     lr: float = 1e-2
     optimizer: str = "sgdm"
     momentum: float = 0.9      # sgdm only
+    # gradient-accumulation microbatches per optimizer step: the batch is
+    # split `accum` ways inside the jitted step and gradients accumulate in
+    # the policy's accum dtype (fp32) — large effective batches under the
+    # reduced-precision activation memory budget
+    accum: int = 1
+    # per-stage precision override — a repro.precision preset name
+    # ("fp32" | "bf16" | "fp16") or a PrecisionPolicy — for the OPTIMIZER
+    # side only: loss scaling / master weights via make_optimizer_for (e.g.
+    # fp16-scale one fragile stage).  The forward compute dtype is a
+    # backend-wide choice taken from TrainSpec.precision (one backend traces
+    # one model dtype); None inherits that spec-wide policy
+    precision: Optional[object] = None
 
 
 @dataclass(frozen=True)
@@ -45,6 +57,9 @@ class TrainSpec:
     batch_size: int = 1410
     shuffle: bool = False
     eval_every: int = 1
+    # spec-wide precision policy (preset name or PrecisionPolicy); None keeps
+    # the legacy behavior: MLP backend fp32, LM backend the config's dtype
+    precision: Optional[object] = None
 
     def stage(self, k: int) -> StageSpec:
         if self.stages and k < len(self.stages):

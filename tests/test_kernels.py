@@ -57,13 +57,14 @@ def test_decode_attention_kernel_sweep(b, lc, h, kv, d, dtype):
 def test_attention_dispatch_force_ref(monkeypatch):
     """REPRO_FORCE_REF=1 pins the jnp reference even when the backend
     reports TPU; without it the TPU path takes the Pallas kernels."""
+    from repro.kernels import dispatch
     from repro.kernels.flash_attention import kernel as fa_kernel
     from repro.kernels.flash_attention import ops
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (1, 1, 4, 64), jnp.float32)
     k = jax.random.normal(ks[1], (1, 16, 2, 64), jnp.float32)
     v = jax.random.normal(ks[2], (1, 16, 2, 64), jnp.float32)
-    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    monkeypatch.setattr(dispatch, "on_tpu", lambda: True)
     hits = []
     monkeypatch.setattr(fa_kernel, "decode_attention_tpu",
                         lambda *a, **kw: hits.append("decode") or
