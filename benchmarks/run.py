@@ -3,15 +3,20 @@ wall-clock microbenches of the core training paths.
 
 Prints ``name,us_per_call,derived`` CSV (one line per benchmark) and writes
 the same rows — plus the fp32-vs-reduced-precision pairs — as machine-
-readable JSON (``results/BENCH_3.json``, uploaded as a CI artifact so the
+readable JSON (``results/BENCH_4.json``, uploaded as a CI artifact so the
 perf trajectory persists across PRs).  The paper figures run in reduced mode
 here (minutes on CPU); ``python -m benchmarks.paper_figures --full``
 reproduces the paper-fidelity versions.  Roofline tables come from ``python
 -m benchmarks.roofline`` (reads the dry-run JSON).
 
+The ``dist`` group (sequential-vs-concurrent stage ticks + per-device
+bytes) needs 8 forced host devices, so it runs ``repro.dist.bench`` in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` —
+this process keeps its single real CPU device.
+
 Usage:
-  python benchmarks/run.py [--only core,precision] [--precision bf16]
-      [--json results/BENCH_3.json]
+  python benchmarks/run.py [--only core,precision,dist] [--precision bf16]
+      [--json results/BENCH_4.json]
 """
 from __future__ import annotations
 
@@ -293,7 +298,7 @@ def bench_precision(precision="bf16"):
     """fp32 vs reduced-precision pairs for the three serving/training hot
     paths (train step, prefill, decode) on the smoke config.
 
-    The paired rows land in BENCH_3.json so the precision win (a ~2x
+    The paired rows land in the BENCH json so the precision win (a ~2x
     activation/cache-bandwidth cut, structural on real accelerators) is
     tracked across PRs.  On this 2-core CPU container XLA emulates bf16
     matmuls, so wall-clock parity — not speedup — is the expected outcome
@@ -353,12 +358,30 @@ def bench_precision(precision="bf16"):
     return rows, pairs
 
 
+def bench_dist():
+    """Sequential-vs-concurrent stage ticks (repro.dist) under 8 forced
+    host devices — in a subprocess, because the device count is fixed at
+    first backend touch and this process must stay single-device."""
+    import subprocess
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
+    out = subprocess.run([sys.executable, "-m", "repro.dist.bench"],
+                         capture_output=True, text=True, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"repro.dist.bench failed:\n{out.stderr[-2000:]}")
+    payload = json.loads(out.stdout)
+    return [(r["name"], r["us"], r["derived"]) for r in payload["rows"]]
+
+
 GROUPS = {
     "core": lambda a: bench_core_paths(),
     "train_api": lambda a: bench_train_api(),
     "serve": lambda a: bench_serve(),
     "kernels": lambda a: bench_kernels(),
     "figures": lambda a: bench_figures(),
+    "dist": lambda a: bench_dist(),
     "precision": None,  # handled specially (also returns pairs)
 }
 
@@ -371,7 +394,7 @@ def main(argv=None) -> None:
     ap.add_argument("--precision", default="bf16",
                     choices=["bf16", "fp16"],
                     help="reduced-precision side of the precision pairs")
-    ap.add_argument("--json", default="results/BENCH_3.json",
+    ap.add_argument("--json", default="results/BENCH_4.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
     selected = list(GROUPS) if not args.only else args.only.split(",")

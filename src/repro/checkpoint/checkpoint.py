@@ -56,6 +56,26 @@ def save_checkpoint(directory: str, step: int, tree: Any, metadata=None) -> str:
     return path
 
 
+def _leaf_placements(flat_like, shardings):
+    """Per-leaf placement targets for restore.
+
+    ``shardings`` may be a pytree matching ``like`` (per-leaf Shardings or
+    Devices), or a SINGLE ``jax.Device`` / ``jax.sharding.Sharding``
+    broadcast to every leaf — the repro.dist per-stage case, where one
+    device owns a stage's whole tree.  (A bare Device used to flatten into
+    a one-leaf tree whose path never matched any manifest key, so
+    single-device sharded restores silently failed.)"""
+    if isinstance(shardings, (jax.Device, jax.sharding.Sharding)):
+        return {k: shardings for k in flat_like}
+    flat_shard, _ = _flatten_with_paths(shardings)
+    missing = [k for k in flat_like if k not in flat_shard]
+    if missing:
+        raise ValueError(f"shardings tree lacks leaves for {missing[:3]}... "
+                         "pass a matching pytree, or one Device/Sharding "
+                         "to broadcast")
+    return flat_shard
+
+
 def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
                        shardings: Any = None) -> Any:
     step = latest_step(directory) if step is None else step
@@ -68,10 +88,12 @@ def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
     leaves = []
     flat_shard = None
     if shardings is not None:
-        flat_shard, _ = _flatten_with_paths(shardings)
+        flat_shard = _leaf_placements(flat_like, shardings)
     for key in flat_like:
         arr = z[key]
         if manifest["dtypes"].get(key) == "bfloat16":
+            # undo the uint16 storage view BEFORE placement so the device
+            # buffer carries the real dtype
             arr = arr.view(_BF16)
         if flat_shard is not None:
             arr = jax.device_put(arr, flat_shard[key])

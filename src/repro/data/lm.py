@@ -44,3 +44,21 @@ def lm_batches(stream: np.ndarray, batch: int, seq: int, seed: int = 0):
         toks = np.stack([stream[i * seq:(i + 1) * seq] for i in idx])
         labs = np.stack([stream[i * seq + 1:(i + 1) * seq + 1] for i in idx])
         yield {"tokens": toks, "labels": labs}
+
+
+def lm_batch_at(stream: np.ndarray, batch: int, seq: int, step: int,
+                seed: int = 0) -> dict:
+    """Batch for step `step` as a PURE function of the index — the same
+    (tokens, labels) no matter the call order or how often it is called.
+
+    This is the replay-determinism contract ``repro.dist`` needs: a resumed
+    stage re-requests ticks t..n and must see exactly the batches the other
+    stages consumed at those ticks.  (``lm_batches`` is a stateful iterator
+    and cannot honor that.)"""
+    n = (len(stream) - 1) // seq
+    rng = np.random.Generator(np.random.PCG64(
+        np.random.SeedSequence((seed, step))))
+    idx = rng.integers(0, n, size=batch)
+    toks = np.stack([stream[i * seq:(i + 1) * seq] for i in idx])
+    labs = np.stack([stream[i * seq + 1:(i + 1) * seq + 1] for i in idx])
+    return {"tokens": toks, "labels": labs}

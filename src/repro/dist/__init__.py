@@ -1,0 +1,56 @@
+"""`repro.dist` — device-placed concurrent stage execution.
+
+The paper's central claim (Fig. 5) is that SIL-decoupled stages can train
+*simultaneously on separate devices with zero inter-partition communication*.
+`repro.train.ParallelSilPhase` models that decoupling but executes it as a
+sequential Python loop on one implicit device; this package actually places
+and runs it:
+
+* ``placement``  — ``PlacementPlan`` maps stages onto devices.  Strategies:
+                   ``round_robin`` (stage k -> device k mod D), ``explicit``
+                   (caller-chosen assignment), and ``memory_balanced``
+                   (greedy LPT packing by per-stage byte estimates — the
+                   same params+optimizer byte model `launch/dryrun.py`
+                   reports per stage).
+* ``executor``   — ``StageExecutor`` pins each stage's params, optimizer
+                   state, and a replicated SIL table to its assigned device
+                   once up front, builds each stage's jitted step against
+                   those committed buffers (JAX compiles one executable per
+                   device; computation follows the pinned data), and
+                   dispatches every stage's step per tick through JAX async
+                   dispatch with no host sync inside the tick — XLA overlaps
+                   the stage programs across devices.  Losses stay device-
+                   resident and drain in one transfer at phase end.
+* ``lifecycle``  — per-stage checkpoint/resume on ``repro.checkpoint``: one
+                   manifest per stage with an independent tick counter,
+                   ``resume_stage`` after a (simulated) stage failure, and
+                   ``join_from_checkpoints`` to rebuild full params for eval
+                   or hand per-stage trees to ``serve.Engine`` staged
+                   deployment without ever joining.
+* ``bench``      — sequential-vs-concurrent tick timings under 8 forced
+                   host devices (the rows `benchmarks/run.py --only dist`
+                   collects into ``results/BENCH_4.json``).
+
+Everything runs on CPU CI under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` with results
+allclose to the sequential path (same step programs, different placement).
+
+Entry points: ``ParallelSilPhase(plan=...)`` in `repro.train.phases` routes
+through the executor; ``launch/train.py --mode pnn --dist round_robin
+--devices 8`` is the CLI spelling.
+"""
+from repro.dist.executor import StageExecutor  # noqa: F401
+from repro.dist.lifecycle import (join_from_checkpoints,  # noqa: F401
+                                  load_stage_params, restore_stage,
+                                  save_stage, stage_dir, stage_ticks)
+from repro.dist.placement import (PlacementPlan, estimate_stage_bytes,  # noqa: F401,E501
+                                  explicit, memory_balanced, resolve,
+                                  round_robin)
+
+__all__ = [
+    "StageExecutor",
+    "PlacementPlan", "round_robin", "explicit", "memory_balanced",
+    "resolve", "estimate_stage_bytes",
+    "save_stage", "restore_stage", "load_stage_params",
+    "join_from_checkpoints", "stage_dir", "stage_ticks",
+]

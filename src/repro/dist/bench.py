@@ -1,0 +1,158 @@
+"""Sequential-vs-concurrent stage-tick benchmark (the BENCH_4 rows).
+
+Forces 8 host devices at import (so it must run in its own process — \
+``benchmarks/run.py --only dist`` shells out here), then times the SAME
+``StageExecutor`` tick under two placements per config:
+
+* seq  — every stage explicitly packed onto device 0 (the pre-dist
+         behavior: one device's worth of compute per tick);
+* conc — stages round-robined across the forced host devices, all steps
+         dispatched per tick with no host sync (XLA overlaps them).
+
+On this 2-core CPU container the forced "devices" share cores, so conc/seq
+wall-clock documents dispatch-overlap structure rather than an 8x win; on
+real multi-accelerator hosts the same placement is the paper's Fig.-5
+simultaneity.  Per-device byte loads come from ``placement``'s estimate —
+the memory the plan actually pins per device.
+
+Usage:  PYTHONPATH=src python -m repro.dist.bench [--ticks 3]
+Prints one JSON object: {"rows": [{name, us, derived}...], "devices": N}.
+"""
+import os
+
+# same contract as mesh.force_host_device_count (not imported — this must
+# run before anything that could touch jax): an outer XLA_FLAGS export wins
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+
+
+def _time_ticks(make_ex, n_warm: int, n_timed: int) -> float:
+    ex = make_ex()
+    ex.run(n_warm)
+    jax.block_until_ready(ex.params)
+    t0 = time.perf_counter()
+    ex.run(n_warm + n_timed)
+    jax.block_until_ready(ex.params)
+    return (time.perf_counter() - t0) / n_timed * 1e6   # us per tick
+
+
+def _loads(placement, stage_bytes):
+    per_dev = [0] * placement.n_devices
+    for k, a in enumerate(placement.assignments):
+        per_dev[a] += stage_bytes[k]
+    return per_dev
+
+
+def bench_mlp(n_ticks: int):
+    from repro.data.images import emnist_like
+    from repro.dist import StageExecutor, estimate_stage_bytes
+    from repro.dist import placement as P
+    from repro.models import mlp as MLP
+    from repro.train import MLPBackend, StageSpec, TrainSpec
+    from repro.train.backends import balanced_bounds, make_optimizer_for
+
+    n_stages, n_warm = 4, 1
+    cfg = MLP.MLPConfig()
+    data = emnist_like(n_train=4096, n_test=128, seed=0, noise=0.5)
+    spec = TrainSpec(batch_size=256, kappa=10.0, n_stages=n_stages,
+                     stages=tuple(StageSpec(epochs=n_warm + n_ticks, lr=0.01)
+                                  for _ in range(n_stages)))
+    be = MLPBackend(cfg, data, spec, bounds=balanced_bounds(cfg, n_stages))
+    params = MLP.init_params(cfg, jax.random.PRNGKey(0))
+    sils = be.make_sils(jax.random.PRNGKey(1), spec.kappa)
+    sp = be.split(params)
+    hps = [spec.stage(k) for k in range(n_stages)]
+    sbytes = [estimate_stage_bytes(sp[k], hps[k].optimizer)
+              for k in range(n_stages)]
+
+    def make(plan):
+        opts = [make_optimizer_for(hp, spec) for hp in hps]
+        return StageExecutor(be, plan, sp, sils, opts, hps, shuffle=False)
+
+    seq = P.explicit([0] * n_stages)
+    conc = P.round_robin(n_stages)
+    us_seq = _time_ticks(lambda: make(seq), n_warm, n_ticks)
+    us_conc = _time_ticks(lambda: make(conc), n_warm, n_ticks)
+    loads = _loads(conc, sbytes)
+    return [
+        ("dist_parallel_mlp_seq_tick", us_seq,
+         f"stages={n_stages};devices=1"),
+        ("dist_parallel_mlp_conc_tick", us_conc,
+         f"stages={n_stages};devices={conc.n_devices};"
+         f"vs_seq={us_seq/us_conc:.2f}x;"
+         f"per_device_bytes={'/'.join(str(b) for b in loads if b)}"),
+    ]
+
+
+def bench_lm(n_ticks: int):
+    from repro.configs import get
+    from repro.core import partition
+    from repro.dist import StageExecutor, estimate_stage_bytes
+    from repro.dist import placement as P
+    from repro.models import model as M
+    from repro.train import LMBackend, StageSpec, TrainSpec
+    from repro.train.backends import make_optimizer_for
+
+    n_stages, n_warm = 2, 1
+    cfg = get("qwen2-1.5b", smoke=True)
+    plan = partition.make_plan(cfg, n_stages)
+
+    def batch_fn(i):
+        k = jax.random.PRNGKey(1000 + i)
+        toks = jax.random.randint(k, (4, 64), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+
+    spec = TrainSpec(n_stages=n_stages, kappa=1.0,
+                     stages=tuple(StageSpec(steps=n_warm + n_ticks, lr=1e-3,
+                                            optimizer="adamw")
+                                  for _ in range(n_stages)))
+    be = LMBackend(cfg, plan, batch_fn, spec)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sils = be.make_sils(jax.random.PRNGKey(1), spec.kappa)
+    sp = be.split(params)
+    hps = [spec.stage(k) for k in range(n_stages)]
+    sbytes = [estimate_stage_bytes(sp[k], hps[k].optimizer)
+              for k in range(n_stages)]
+
+    def make(pl):
+        opts = [make_optimizer_for(hp, spec) for hp in hps]
+        return StageExecutor(be, pl, sp, sils, opts, hps)
+
+    seq = P.explicit([0] * n_stages)
+    conc = P.round_robin(n_stages)
+    us_seq = _time_ticks(lambda: make(seq), n_warm, n_ticks)
+    us_conc = _time_ticks(lambda: make(conc), n_warm, n_ticks)
+    loads = _loads(conc, sbytes)
+    return [
+        ("dist_parallel_lm_seq_tick", us_seq,
+         f"stages={n_stages};devices=1"),
+        ("dist_parallel_lm_conc_tick", us_conc,
+         f"stages={n_stages};devices={conc.n_devices};"
+         f"vs_seq={us_seq/us_conc:.2f}x;"
+         f"per_device_bytes={'/'.join(str(b) for b in loads if b)}"),
+    ]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ticks", type=int, default=3,
+                    help="timed ticks per measurement (1 extra for compile)")
+    args = ap.parse_args(argv)
+    rows = bench_mlp(args.ticks) + bench_lm(args.ticks)
+    print(json.dumps({
+        "devices": len(jax.devices()),
+        "rows": [{"name": n, "us": us, "derived": d} for n, us, d in rows],
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Per-stage checkpoint / resume / join, on top of ``repro.checkpoint``.
+
+Each stage owns its own checkpoint directory (``<root>/stage_NN``) with its
+own manifest and an INDEPENDENT tick counter — the paper's partitions share
+no training state, so a stage failure must be recoverable from that stage's
+checkpoints alone, without touching (or even reading) the others:
+
+    save_stage(root, k, tick, params, opt_state)     # one stage, one manifest
+    restore_stage(root, k, like_params, like_opt,    # -> (params, opt, tick)
+                  device=plan.device_for(k))
+    join_from_checkpoints(root, like_stage_params,   # full params for eval /
+                          join_fn=backend.join)      # deployment
+
+``device=`` placement routes through ``restore_checkpoint``'s sharded-
+restore path with a single ``jax.Device`` target, so a resumed stage lands
+committed on its assigned device exactly like the executor pinned it at
+startup.  ``join_from_checkpoints`` leaves placement to the caller (host
+arrays) — the joined tree feeds eval or ``serve.Engine`` staged deployment,
+both of which re-place params themselves.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, List, Optional, Sequence
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def stage_dir(root: str, k: int) -> str:
+    return os.path.join(root, f"stage_{k:02d}")
+
+
+def save_stage(root: str, k: int, tick: int, stage_params,
+               opt_state=None, metadata: Optional[dict] = None) -> str:
+    """Checkpoint one stage: params (+ optimizer state) under the stage's
+    own directory, at the stage's own tick counter."""
+    tree = {"params": stage_params}
+    if opt_state is not None:
+        tree["opt"] = opt_state
+    meta = dict(metadata or {})
+    meta.setdefault("stage", k)
+    meta.setdefault("tick", int(tick))
+    return save_checkpoint(stage_dir(root, k), int(tick), tree, metadata=meta)
+
+
+def restore_stage(root: str, k: int, like_params, like_opt=None, *,
+                  step: Optional[int] = None, device=None):
+    """Restore one stage -> ``(params, opt_state_or_None, tick)``.
+
+    ``like_*`` supply tree structure only (live trees, or
+    ``jax.ShapeDtypeStruct`` stand-ins).  ``device`` commits every restored
+    leaf to that single device (the executor's pinning contract); None
+    returns host arrays."""
+    d = stage_dir(root, k)
+    tick = latest_step(d) if step is None else int(step)
+    if tick is None:
+        raise FileNotFoundError(f"no checkpoints for stage {k} under {root}")
+    like = {"params": like_params}
+    if like_opt is not None:
+        like["opt"] = like_opt
+    tree = restore_checkpoint(d, like, step=tick, shardings=device)
+    return tree["params"], tree.get("opt"), tick
+
+
+def stage_ticks(root: str, n_stages: int) -> List[Optional[int]]:
+    """Latest checkpointed tick per stage (None where a stage has none) —
+    the independent step counters, read without loading any arrays."""
+    return [latest_step(stage_dir(root, k)) for k in range(n_stages)]
+
+
+def load_stage_params(root: str, like_stage_params: Sequence, *,
+                      step: Optional[int] = None,
+                      devices: Optional[Sequence] = None) -> List[Any]:
+    """All stages' params (no optimizer state), each from its own latest —
+    or ``step``-pinned — manifest."""
+    out = []
+    for k, like in enumerate(like_stage_params):
+        dev = devices[k] if devices is not None else None
+        params, _, _ = restore_stage(root, k, like, step=step, device=dev)
+        out.append(params)
+    return out
+
+
+def join_from_checkpoints(root: str, like_stage_params: Sequence,
+                          join_fn: Callable[[List[Any]], Any], *,
+                          step: Optional[int] = None):
+    """Rebuild the full network from per-stage checkpoints (paper: "the
+    partitions can be joined after this stage, to use the network").
+
+    ``join_fn`` is the backend's joiner (``MLPBackend.join`` /
+    ``LMBackend.join`` / ``partial(partition.join_stage_params, cfg,
+    plan)``).  For staged serving, skip the join and pass
+    ``load_stage_params`` output to ``serve.Engine(plan=, stage_params=)``
+    directly."""
+    return join_fn(load_stage_params(root, like_stage_params, step=step))

@@ -1,0 +1,162 @@
+"""Stage -> device placement plans.
+
+A ``PlacementPlan`` is the static answer to "which device trains partition
+k" — the part the model-parallelism literature calls the hard part of
+partitioned training (placement + per-partition scheduling).  Three
+strategies:
+
+* ``round_robin``     — stage k on device k mod D (the load-oblivious
+                        default; exact when stages are balanced, which
+                        ``partition.make_plan`` aims for).
+* ``explicit``        — caller-chosen assignment (reproduce a known-good
+                        layout, or co-locate stages deliberately).
+* ``memory_balanced`` — greedy LPT packing by per-stage byte estimates
+                        (params + optimizer slots), the same byte model
+                        ``launch/dryrun.py`` reports per PNN stage.  Use
+                        when stages are uneven (embedding-heavy stage 0,
+                        unembedding-heavy last stage) or when D < stages.
+
+``devices`` entries are opaque to this module — real ``jax.Device`` objects
+in production, any hashable stand-ins (ints) in pure planning/tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+# optimizer-state slots per param (fp32 each), for the byte estimate.
+# adafactor's factored second moments are ~sqrt-sized: negligible here.
+_OPT_SLOTS = {"sgd": 0, "sgdm": 1, "adam": 2, "adamw": 2, "adafactor": 0}
+
+
+@dataclass(frozen=True)
+class PlacementPlan:
+    """``assignments[k]`` is the ordinal (into ``devices``) of the device
+    that owns stage k's params, optimizer state, and step program."""
+    assignments: Tuple[int, ...]
+    devices: Tuple[Any, ...]
+    strategy: str = "explicit"
+    loads: Tuple[int, ...] = ()    # per-device byte estimate (memory plans)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def device_for(self, k: int):
+        return self.devices[self.assignments[k]]
+
+    def validate(self, n_stages: int) -> "PlacementPlan":
+        if len(self.assignments) != n_stages:
+            raise ValueError(f"plan places {len(self.assignments)} stages; "
+                             f"the backend has {n_stages}")
+        if not self.devices:
+            raise ValueError("plan has no devices")
+        bad = [a for a in self.assignments
+               if not 0 <= a < len(self.devices)]
+        if bad:
+            raise ValueError(f"assignments {bad} out of range for "
+                             f"{len(self.devices)} devices")
+        return self
+
+    def describe(self) -> str:
+        per_dev = {}
+        for k, a in enumerate(self.assignments):
+            per_dev.setdefault(a, []).append(k)
+        parts = [f"dev{a}<-stages{v}" for a, v in sorted(per_dev.items())]
+        return f"{self.strategy}: " + " ".join(parts)
+
+
+def _default_devices(devices):
+    if devices is not None:
+        return tuple(devices)
+    import jax
+    return tuple(jax.devices())
+
+
+def round_robin(n_stages: int, devices: Optional[Sequence] = None
+                ) -> PlacementPlan:
+    devs = _default_devices(devices)
+    return PlacementPlan(tuple(k % len(devs) for k in range(n_stages)),
+                         devs, strategy="round_robin").validate(n_stages)
+
+
+def explicit(assignments: Sequence[int], devices: Optional[Sequence] = None
+             ) -> PlacementPlan:
+    devs = _default_devices(devices)
+    plan = PlacementPlan(tuple(int(a) for a in assignments), devs,
+                         strategy="explicit")
+    return plan.validate(len(assignments))
+
+
+def memory_balanced(stage_bytes: Sequence[int],
+                    devices: Optional[Sequence] = None) -> PlacementPlan:
+    """Greedy LPT bin packing: place stages largest-first onto the device
+    with the least byte load so far.  Deterministic (ties break toward the
+    lower stage index / lower device ordinal); max per-device load is never
+    worse than round-robin's."""
+    devs = _default_devices(devices)
+    loads = [0] * len(devs)
+    assignments = [0] * len(stage_bytes)
+    order = sorted(range(len(stage_bytes)),
+                   key=lambda k: (-int(stage_bytes[k]), k))
+    for k in order:
+        a = min(range(len(devs)), key=lambda d: (loads[d], d))
+        assignments[k] = a
+        loads[a] += int(stage_bytes[k])
+    plan = PlacementPlan(tuple(assignments), devs, strategy="memory",
+                         loads=tuple(loads))
+    return plan.validate(len(stage_bytes))
+
+
+# --------------------------------------------------------------------------
+# byte estimates (the dryrun/hlo_analysis per-stage memory model)
+# --------------------------------------------------------------------------
+
+def tree_param_bytes(tree, itemsize: Optional[int] = None) -> int:
+    """Bytes of a param tree from shapes+dtypes alone — works for live
+    arrays, numpy arrays, and ``jax.ShapeDtypeStruct`` stand-ins.
+    ``itemsize`` overrides the per-leaf dtype width (e.g. 4 to size fp32
+    optimizer slots over half-precision params)."""
+    import jax
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        n = int(np.prod(leaf.shape)) if getattr(leaf, "shape", ()) else 1
+        total += n * (itemsize if itemsize is not None
+                      else np.dtype(leaf.dtype).itemsize)
+    return total
+
+
+def estimate_stage_bytes(stage_params, optimizer: str = "sgdm") -> int:
+    """Resident bytes of one training stage: params + fp32 optimizer slots
+    (grads are transient under jit and excluded, matching the per-stage
+    numbers ``launch/dryrun.py --mode pnn`` reports)."""
+    pb = tree_param_bytes(stage_params)
+    slots = _OPT_SLOTS.get(optimizer, 2)
+    return pb + slots * tree_param_bytes(stage_params, itemsize=4)
+
+
+def resolve(plan: Union[PlacementPlan, str], n_stages: int, *,
+            devices: Optional[Sequence] = None,
+            stage_bytes: Optional[Union[Sequence[int], Callable]] = None
+            ) -> PlacementPlan:
+    """Turn a plan-or-strategy-name into a validated ``PlacementPlan``.
+
+    ``stage_bytes`` feeds the ``"memory"`` strategy: a byte list, or a
+    zero-arg callable producing one (deferred so the estimate runs only
+    when that strategy is actually chosen)."""
+    if isinstance(plan, PlacementPlan):
+        return plan.validate(n_stages)
+    if plan == "round_robin":
+        return round_robin(n_stages, devices)
+    if plan == "memory":
+        if stage_bytes is None:
+            raise ValueError("memory placement needs stage_bytes")
+        sizes = stage_bytes() if callable(stage_bytes) else stage_bytes
+        return memory_balanced(sizes, devices)
+    if isinstance(plan, (list, tuple)):
+        return explicit(plan, devices)
+    raise ValueError(f"unknown placement plan {plan!r}; expected a "
+                     "PlacementPlan, 'round_robin', 'memory', or an "
+                     "explicit assignment sequence")

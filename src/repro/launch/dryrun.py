@@ -124,6 +124,7 @@ def model_flops(cfg, shape) -> float:
 def dryrun_one(arch: str, shape_name: str, *, multi_pod=False, mode="baseline",
                seq_shard=False, rec_shard=False, accum_override=None,
                moe_local=False, mesh_shape=None, precision=None,
+               pnn_stages=2, dist_devices=None,
                verbose=True) -> Dict[str, Any]:
     shape = INPUT_SHAPES[shape_name]
     cfg0 = get(arch)
@@ -177,7 +178,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod=False, mode="baseline",
                                     moe_local))
         elif shape.kind == "train" and mode == "pnn":
             rec.update(_lower_pnn(cfg, shape, mesh, policy, params_struct,
-                                  p_sh, seq_shard))
+                                  p_sh, seq_shard, n_stages=pnn_stages,
+                                  dist_devices=dist_devices))
         elif shape.kind == "prefill":
             rec.update(_lower_prefill(cfg, shape, mesh, policy, params_struct,
                                       p_sh))
@@ -264,14 +266,18 @@ def _lower_decode(cfg, shape, mesh, policy, params_struct, p_sh):
 
 
 def _lower_pnn(cfg, shape, mesh, policy, params_struct, p_sh,
-               seq_shard=False):
+               seq_shard=False, n_stages=2, dist_devices=None):
     """Lower every PNN stage's step; report per-stage memory + collectives.
 
     This is the paper's claim measured: each stage's step touches only that
     stage's params/optimizer state, and stages train with zero inter-stage
     collectives (the pod axis carries nothing during training).
+
+    dist_devices: also report the memory-balanced ``repro.dist`` placement
+    of the stages onto that many devices, packed by these same per-stage
+    byte numbers.
     """
-    plan = partition.make_plan(cfg, n_stages=2)
+    plan = partition.make_plan(cfg, n_stages=n_stages)
     opt_name = pick_optimizer_name(cfg)
     stages = []
     for k in range(plan.n_stages):
@@ -327,8 +333,19 @@ def _lower_pnn(cfg, shape, mesh, policy, params_struct, p_sh,
             "stage_params_bytes_per_chip": spb,
             "stage_opt_bytes_per_chip": sob,
         })
-    return {"optimizer": opt_name, "pnn_stages": stages,
-            "n_stages": plan.n_stages}
+    out = {"optimizer": opt_name, "pnn_stages": stages,
+           "n_stages": plan.n_stages}
+    if dist_devices:
+        # pack stages onto a smaller device set by the byte estimates just
+        # computed — the plan repro.dist's "memory" strategy would pick
+        from repro.dist.placement import memory_balanced
+        per_stage = [s["stage_params_bytes_per_chip"]
+                     + s["stage_opt_bytes_per_chip"] for s in stages]
+        pl = memory_balanced(per_stage, devices=tuple(range(dist_devices)))
+        out["placement"] = {"strategy": pl.strategy,
+                            "assignments": list(pl.assignments),
+                            "loads_bytes": list(pl.loads)}
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -357,6 +374,11 @@ def main(argv=None):
                     choices=["fp32", "bf16", "fp16"],
                     help="precision policy for the compute path (activation "
                          "+ cache dtypes; params keep their storage dtype)")
+    ap.add_argument("--stages", type=int, default=2,
+                    help="PNN partition count for --mode pnn")
+    ap.add_argument("--dist-devices", type=int, default=None,
+                    help="report the memory-balanced repro.dist placement "
+                         "of the PNN stages onto N devices")
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args(argv)
@@ -389,6 +411,10 @@ def main(argv=None):
                 variant += f"+accum{args.accum}"
             if args.precision:
                 variant += f"+{args.precision}"
+            if args.mode == "pnn" and args.stages != 2:
+                variant += f"+stages{args.stages}"
+            if args.mode == "pnn" and args.dist_devices:
+                variant += f"+dist{args.dist_devices}"
             is_multi = args.multi_pod or args.mode == "pipeline"
             key = f"{arch}|{shape}|{'multi' if is_multi else 'single'}" \
                 f"|{args.mode}|{variant}"
@@ -406,7 +432,9 @@ def main(argv=None):
                                  mesh_shape=tuple(int(x) for x in
                                                   args.mesh.split("x"))
                                  if args.mesh else None,
-                                 precision=args.precision)
+                                 precision=args.precision,
+                                 pnn_stages=args.stages,
+                                 dist_devices=args.dist_devices)
             except Exception as e:
                 rec = {"arch": arch, "shape": shape, "status": "error",
                        "error": f"{type(e).__name__}: {e}",
@@ -429,6 +457,13 @@ def main(argv=None):
                         print(f"  stage{st['stage']}: "
                               f"params/chip={st['stage_params_bytes_per_chip']/2**20:.0f}MiB "
                               f"coll={a['collective_s']*1e3:.2f}ms")
+                    if "placement" in rec:
+                        pl = rec["placement"]
+                        loads = "/".join(f"{b/2**20:.0f}MiB"
+                                         for b in pl["loads_bytes"])
+                        print(f"  placement[{pl['strategy']}]: "
+                              f"stages->devices {pl['assignments']} "
+                              f"loads {loads}")
             elif rec.get("status") == "skipped":
                 print(f"  skipped: {rec['reason']}")
     n_ok = sum(1 for r in results.values() if r.get("status") == "ok")

@@ -11,7 +11,33 @@ outer data-parallel axis.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+
+def force_host_device_count(n: int) -> None:
+    """Ask XLA's CPU backend for ``n`` host devices — the CI/dev-box
+    stand-in for a multi-accelerator host that ``repro.dist`` places stages
+    across.  Must run BEFORE the first JAX backend touch (any
+    ``jax.devices()`` / array op); a no-op when the flag is already set so
+    an outer ``XLA_FLAGS`` export wins."""
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = \
+            (cur + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def stage_devices(n: int) -> tuple:
+    """The first ``n`` devices, for a stage placement plan."""
+    devs = jax.devices()
+    if n > len(devs):
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)}; on CPU export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            "python starts (or pass --devices to repro.launch.train, which "
+            "sets it pre-init)")
+    return tuple(devs[:n])
 
 
 def make_production_mesh(*, multi_pod: bool = False, shape=None):

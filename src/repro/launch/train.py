@@ -7,19 +7,21 @@ the same code path (reduced configs via --smoke).
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
       --steps 20 --batch 8 --seq 128 [--mode pnn --stages 2] [--seq-shard]
+      [--dist round_robin --devices 8] [--resume ckpts/run1]
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import ARCH_NAMES, get
 from repro.core import partition
-from repro.data.lm import lm_batches, synthetic_token_stream
+from repro.data.lm import lm_batch_at, lm_batches, synthetic_token_stream
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import Policy
 from repro.launch.steps import (build_train_step, pick_accum,
@@ -52,7 +54,31 @@ def main():
                     help="gradient-accumulation microbatches per step "
                          "(fp32 accumulators inside the jitted step)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="per-stage checkpoint cadence in ticks "
+                         "(--dist modes; 0 = final only)")
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint dir to restore params from before "
+                         "training (latest step; log lines carry the "
+                         "step offset)")
+    ap.add_argument("--dist", default="none",
+                    choices=["none", "round_robin", "memory"],
+                    help="PNN stage placement: run ParallelSilPhase through "
+                         "the repro.dist StageExecutor with stages placed "
+                         "across devices (requires --mode pnn)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU: sets XLA_FLAGS "
+                         "--xla_force_host_platform_device_count pre-init) "
+                         "and place stages across them")
     args = ap.parse_args()
+
+    if args.devices:
+        # must precede every jax backend touch in this process
+        from repro.launch.mesh import force_host_device_count
+        force_host_device_count(args.devices)
+    if args.dist != "none" and args.mode != "pnn":
+        raise SystemExit("--dist requires --mode pnn (stage placement only "
+                         "exists for partitioned training)")
 
     cfg = get(args.arch, smoke=args.smoke)
     prec = None
@@ -75,8 +101,43 @@ def main():
         return {k: jnp.asarray(v) for k, v in next(it).items()}
 
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    step0 = 0
+    if args.resume:
+        step0 = latest_step(args.resume) or 0
+        params = restore_checkpoint(args.resume, {"params": params})["params"]
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        print(f"resumed params from {args.resume} @ step {step0} "
+              f"(training continues to step {step0 + args.steps})")
 
-    if args.mode == "pnn":
+    if args.mode == "pnn" and args.dist != "none":
+        # repro.dist: every stage trains simultaneously, each pinned to its
+        # own device (Fig. 5 actually executed; see src/repro/dist/)
+        from repro.launch.mesh import stage_devices
+        devs = stage_devices(args.devices or min(args.stages, n_dev))
+        plan = partition.make_plan(cfg, args.stages)
+        spec = TrainSpec(
+            n_stages=args.stages, kappa=1.0, precision=args.precision,
+            stages=tuple(StageSpec(steps=args.steps, lr=args.lr,
+                                   optimizer="adamw", accum=args.accum)
+                         for _ in range(args.stages)))
+        ckpt_dir = os.path.join(args.ckpt_dir, "stages") \
+            if args.ckpt_dir else None
+
+        def batch_at(i):
+            # PURE function of the tick index (not the shared stateful
+            # iterator): a resumed stage replaying ticks t..n must see
+            # exactly the batches the other stages consumed at those ticks
+            return {k: jnp.asarray(v) for k, v in
+                    lm_batch_at(stream, args.batch, args.seq, i).items()}
+        params, hist = recipes.run_lm_parallel(
+            cfg, plan, params, batch_at, spec, jax.random.PRNGKey(1),
+            dist=args.dist, dist_devices=devs, ckpt_dir=ckpt_dir,
+            ckpt_every=args.ckpt_every)
+        losses_tail = hist.column("loss")[-5:]
+        print(f"dist={args.dist} over {len(devs)} devices; "
+              "PNN parallel losses (tail):",
+              [round(l, 3) for l in losses_tail])
+    elif args.mode == "pnn":
         # PNN stage steps go through the SAME Policy/sharding plumbing as
         # baseline training; on sub-mesh hosts --seq-shard fails loudly
         # instead of being silently ignored (it used to be).
@@ -150,12 +211,13 @@ def main():
         for i in range(args.steps):
             params, state, metrics = step_fn(params, state, next_batch(i))
             if (i + 1) % max(args.steps // 5, 1) == 0 or i == 0:
-                print(f"step {i+1:4d} ce={float(metrics['ce']):.3f} "
+                print(f"step {step0+i+1:4d} ce={float(metrics['ce']):.3f} "
                       f"grad_norm={float(metrics['grad_norm']):.2f} "
                       f"({(i+1)*args.batch*args.seq/(time.time()-t0):.0f} tok/s)")
 
     if args.ckpt_dir:
-        path = save_checkpoint(args.ckpt_dir, args.steps, {"params": params})
+        path = save_checkpoint(args.ckpt_dir, step0 + args.steps,
+                               {"params": params})
         print("saved:", path)
 
 

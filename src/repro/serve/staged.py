@@ -18,6 +18,32 @@ from repro.models import layers as L
 from repro.models import model as M
 
 
+def stage_params_from_checkpoints(cfg, plan, ckpt_root, *, step=None,
+                                  devices=None):
+    """Per-stage param trees for staged serving, restored straight from a
+    ``repro.dist.lifecycle`` per-stage checkpoint directory — the paper's
+    partitions deploy WITHOUT ever being joined.
+
+    The restore needs only tree *structure*, so the ``like`` trees are
+    ``jax.eval_shape`` stand-ins (no weights materialize besides the
+    checkpointed ones).  Feed the result to ``serve.Engine(cfg, plan=plan,
+    stage_params=...)``; ``devices`` optionally pins stage k's tree to
+    ``devices[k]`` on the way in."""
+    from repro.core import partition
+    from repro.dist import lifecycle
+
+    def all_likes():
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        return [partition.slice_stage_params(cfg, plan, params, k)
+                for k in range(plan.n_stages)]
+    likes = jax.eval_shape(all_likes)   # ONE abstract trace for all stages
+    sps = lifecycle.load_stage_params(ckpt_root, likes, step=step,
+                                      devices=devices)
+    if devices is None:
+        sps = [jax.tree_util.tree_map(jnp.asarray, sp) for sp in sps]
+    return sps
+
+
 def _unembed_params(cfg, last_stage_params):
     """Param view for the last stage's unembedding (tied-snapshot aware)."""
     if "tied_unembed" in last_stage_params:

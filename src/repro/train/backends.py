@@ -497,6 +497,32 @@ class LMBackend:
 
         return self._jit_step(step)
 
+    def build_parallel_stage_step(self, k: int, opt, sil_in, sil_target,
+                                  stage_params_struct=None, accum: int = 1):
+        """Fig.-5 step for stage k>0 with the synthetic-input lookup FUSED
+        into the jitted program: callers pass only (sp, st, labels) and
+        SIL_{k-1}[:, y] is derived on-device from ``sil_in``.  The
+        ``repro.dist`` executor uses this so one tick dispatches one call
+        per stage with zero host-side array construction between stages —
+        ``sil_in`` is expected to be pre-pinned to the stage's device.
+
+        ``sil_target`` is SIL_k (None for the last stage, which trains CE);
+        math is identical to ``synthetic_input`` + ``build_stage_step``."""
+        if k == 0:
+            raise ValueError("stage 0 consumes the real batch; use "
+                             "build_stage_step")
+        inner = self.build_stage_step(k, opt, sil_target,
+                                      stage_params_struct, accum=accum)
+        act = self.cfg.activation_dtype()
+        enc_dec = self.cfg.enc_dec
+
+        def step(sp, st, labels):
+            syn = sil_lib.sil_lookup(sil_in, labels).astype(act)
+            xin = (syn, None) if enc_dec else syn
+            return inner(sp, st, xin, labels)
+
+        return self._jit_step(step)
+
     def build_recovery_step(self, j: int, frozen_stages: list, opt,
                             accum: int = 1):
         """End-to-end CE training of stage j, all other stages frozen."""

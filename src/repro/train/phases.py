@@ -26,7 +26,7 @@ functions.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,29 @@ import numpy as np
 from repro.train.backends import make_optimizer_for, scanned_epoch_fn
 from repro.train.boundary import BoundaryCache
 from repro.train.spec import StageSpec
+
+
+def _resolve_placement(plan, devices, trainer, state):
+    """Plan-or-strategy-name -> validated ``repro.dist.PlacementPlan``.
+
+    The ``"memory"`` strategy's byte estimates come from the LIVE per-stage
+    param trees plus each stage's configured optimizer (deferred — only
+    computed when that strategy is chosen)."""
+    from repro.dist import placement as P
+    be = trainer.backend
+
+    def stage_bytes():
+        return [P.estimate_stage_bytes(state.stage_params[k],
+                                       trainer.spec.stage(k).optimizer)
+                for k in range(be.n_stages)]
+    return P.resolve(plan, be.n_stages, devices=devices,
+                     stage_bytes=stage_bytes)
+
+
+def _rehost(tree):
+    """Pull a (possibly device-committed) tree back to uncommitted default-
+    device arrays so later phases can freely mix it with other stages."""
+    return jax.tree_util.tree_map(jnp.asarray, jax.device_get(tree))
 
 
 @dataclass
@@ -160,11 +183,18 @@ class BoundaryMaterializePhase(PhaseBase):
     are pulled from the device in chunks straight into a reserved
     ``BoundaryCache`` buffer (optionally memmap-spilled to `spill_dir`).
     LM backend: captures `n_batches` batches from the stream (decoder-only
-    models)."""
+    models).
+
+    With a ``plan`` (a ``repro.dist`` PlacementPlan or strategy name) the
+    frozen-prefix forward runs as the PRODUCER on the device that owns the
+    last prefix stage — paired with ``FrozenPrefixPhase(plan=...)`` the
+    paper's single communication becomes an actual inter-device hop."""
     upto: int = 1
     spill_dir: Optional[str] = None
     spill_threshold_bytes: Optional[int] = None
     n_batches: Optional[int] = None    # LM backend only
+    plan: Optional[object] = None
+    devices: Optional[Sequence] = None
     name: str = "materialize"
 
     def _cache(self) -> BoundaryCache:
@@ -177,6 +207,14 @@ class BoundaryMaterializePhase(PhaseBase):
         be = trainer.backend
         fwd = be.prefix_forward(self.upto)
         frozen = tuple(state.stage_params[: self.upto])
+        if self.plan is not None:
+            # producer placement: the prefix forward runs on the device
+            # owning the last frozen stage (batches follow the committed
+            # params; the cache append pulls to host as before)
+            placement = _resolve_placement(self.plan, self.devices,
+                                           trainer, state)
+            frozen = jax.device_put(frozen,
+                                    placement.device_for(self.upto - 1))
         old = state.boundary.get("h")
         if old is not None and hasattr(old, "close"):
             old.close()   # re-materialization must not leak a spill file
@@ -227,9 +265,17 @@ class FrozenPrefixPhase(PhaseBase):
     source='cache': inputs come from the materialized BoundaryCache (the
     paper's Fig.-3 right phase — zero prefix compute during training).
     source='live': the frozen prefix runs forward every step (the
-    transformer-sequential default, where data is a stream)."""
+    transformer-sequential default, where data is a stream).
+
+    With a ``plan`` (``repro.dist`` PlacementPlan or strategy name) the
+    trained stage lives on its assigned device as the CONSUMER; under
+    source='live' the frozen prefix runs as the PRODUCER on the device
+    owning stage k-1 and each boundary activation hops producer->consumer
+    (the paper's sole communication, as a real transfer)."""
     stage: int = 1
     source: str = "cache"
+    plan: Optional[object] = None
+    devices: Optional[Sequence] = None
     name: str = "right"
     seed_base: int = 100
     # interior stages regress to their SIL table; the last stage does not,
@@ -248,6 +294,15 @@ class FrozenPrefixPhase(PhaseBase):
         opt = make_optimizer_for(hp, trainer.spec)
         if hasattr(be, "before_stage_train"):
             be.before_stage_train(state.stage_params, k)
+        consumer = producer = None
+        if self.plan is not None:
+            placement = _resolve_placement(self.plan, self.devices,
+                                           trainer, state)
+            consumer = placement.device_for(k)
+            producer = placement.device_for(k - 1) if k > 0 else consumer
+        train_params = state.stage_params[k]
+        if consumer is not None:
+            train_params = jax.device_put(train_params, consumer)
         if be.kind == "mlp":
             if self.source != "cache" or "h" not in state.boundary:
                 raise ValueError("MLP FrozenPrefixPhase needs a preceding "
@@ -261,18 +316,18 @@ class FrozenPrefixPhase(PhaseBase):
             def batch_arrays(ep):
                 return be.array_epoch_arrays(h, y, self.seed_base + ep,
                                              be.spec.shuffle)
-            opt_state = opt.init(state.stage_params[k])
-            state.stage_params[k], _ = trainer.drive_epochs(
-                state, step=step, train_params=state.stage_params[k],
+            opt_state = opt.init(train_params)
+            train_params, _ = trainer.drive_epochs(
+                state, step=step, train_params=train_params,
                 opt_state=opt_state, epochs=hp.epochs, phase_name=self.name,
                 stage=k, macs_per_sample=be.stage_macs(k),
                 seed_base=self.seed_base, log_mode="cadence+last",
                 batch_arrays=batch_arrays)
         else:
             sil = None if last else state.sils[k]
-            step = be.build_stage_step(k, opt, sil, state.stage_params[k],
+            step = be.build_stage_step(k, opt, sil, train_params,
                                        accum=hp.accum)
-            opt_state = opt.init(be.trainable(state.stage_params[k]))
+            opt_state = opt.init(be.trainable(train_params))
             if self.source == "cache":
                 if "h" not in state.boundary:
                     raise ValueError("no materialized boundary; add a "
@@ -291,15 +346,23 @@ class FrozenPrefixPhase(PhaseBase):
             else:
                 prefix = be.prefix_forward(k)
                 frozen = tuple(state.stage_params[:k])
+                if producer is not None:
+                    frozen = jax.device_put(frozen, producer)
 
                 def inputs(i):
                     batch = be.batch_fn(i)
-                    return (prefix(frozen, batch), batch["labels"],
-                            batch.get("mask"))
-            state.stage_params[k], _ = trainer.drive_steps(
+                    hb = prefix(frozen, batch)
+                    if consumer is not None:
+                        # the paper's single inter-partition communication,
+                        # as an actual producer->consumer device transfer
+                        hb = jax.device_put(hb, consumer)
+                    return (hb, batch["labels"], batch.get("mask"))
+            train_params, _ = trainer.drive_steps(
                 state, step=step, inputs_fn=inputs, n_steps=hp.steps,
                 phase_name=self.name, stage=k,
-                train_params=state.stage_params[k], opt_state=opt_state)
+                train_params=train_params, opt_state=opt_state)
+        state.stage_params[k] = _rehost(train_params) \
+            if consumer is not None else train_params
 
 
 # ==========================================================================
@@ -352,17 +415,61 @@ class ParallelSilPhase(PhaseBase):
     Interior stage k consumes SIL_{k-1}[:, y] and regresses to SIL_k[:, y];
     stage 0 consumes real inputs; the last stage trains with CE.  The paper
     deems the mode impractical for accuracy; it is the zero-communication
-    extreme of the schedule space."""
+    extreme of the schedule space.
+
+    ``plan`` (a ``repro.dist`` PlacementPlan, a strategy name
+    'round_robin'/'memory', or an explicit assignment list) routes the phase
+    through ``repro.dist.StageExecutor``: every stage's params/optimizer
+    state pin to its assigned device and all stage steps dispatch per tick
+    with no host sync — the paper's Fig.-5 simultaneity actually executed.
+    ``ckpt_dir``/``ckpt_every`` enable per-stage checkpointing (one manifest
+    and tick counter per stage; see ``repro.dist.lifecycle``)."""
     name: str = "parallel"
     needs_sil = True
     shuffle: bool = True           # legacy MLP fig-5 shuffles
+    plan: Optional[object] = None
+    devices: Optional[Sequence] = None
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
 
     def run(self, trainer, state) -> None:
         be = trainer.backend
-        if be.kind == "mlp":
+        if self.plan is not None:
+            self._run_dist(trainer, state)
+        elif be.kind == "mlp":
             self._run_mlp(trainer, state)
         else:
             self._run_lm(trainer, state)
+
+    def _run_dist(self, trainer, state) -> None:
+        from repro.dist.executor import StageExecutor
+        be = trainer.backend
+        if be.kind != "mlp" and (be.shard_x is not None
+                                 or be.grad_pspecs_fn is not None):
+            # the executor builds steps without the mesh-sharding hooks;
+            # dropping a caller's with_sharding_constraint pass silently
+            # would be a correctness trap on real meshes
+            raise ValueError(
+                "dist placement is incompatible with the Policy sharding "
+                "hooks (shard_x/grad_pspecs_fn): stages pin whole trees to "
+                "single devices. Drop the hooks or run without plan=.")
+        placement = _resolve_placement(self.plan, self.devices,
+                                       trainer, state)
+        hps = [self.resolve(trainer.spec.stage(k))
+               for k in range(be.n_stages)]
+        opts = [make_optimizer_for(hp, trainer.spec) for hp in hps]
+        ex = StageExecutor(be, placement, state.stage_params, state.sils,
+                           opts, hps, seed_base=self.seed_base,
+                           shuffle=self.shuffle, ckpt_dir=self.ckpt_dir,
+                           ckpt_every=self.ckpt_every)
+        if be.kind == "mlp":
+            n_ticks = max(hp.epochs for hp in hps)
+        else:
+            n_ticks = max(hp.steps for hp in hps)
+        ex.run(n_ticks)
+        if self.ckpt_dir:
+            ex.checkpoint()    # final per-stage manifests at their ticks
+        ex.finalize(trainer, state, phase_name=self.name)
 
     def _run_mlp(self, trainer, state) -> None:
         be = trainer.backend
@@ -399,7 +506,8 @@ class ParallelSilPhase(PhaseBase):
         steps = [be.build_stage_step(
             k, opts[k],
             None if k == be.n_stages - 1 else state.sils[k],
-            state.stage_params[k]) for k in range(be.n_stages)]
+            state.stage_params[k], accum=hps[k].accum)
+            for k in range(be.n_stages)]
         pending, logged_steps, logged_stages = [], [], []
         n_steps = max(hp.steps for hp in hps)
         for i in range(n_steps):

@@ -92,9 +92,13 @@ def run_mlp_fig3(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
 
 
 def run_mlp_fig5(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
-                 n_stages: int = 3):
+                 n_stages: int = 3, *, dist=None, dist_devices=None,
+                 ckpt_dir=None, ckpt_every: int = 0):
     """Fig. 5 all-parallel mode.  Key schedule (legacy-exact):
-    split(key, n_stages + 2); params from keys[0], SIL k from keys[1 + k]."""
+    split(key, n_stages + 2); params from keys[0], SIL k from keys[1 + k].
+
+    dist: a ``repro.dist`` PlacementPlan or strategy name — routes the
+    parallel phase through the device-placed ``StageExecutor``."""
     backend = MLPBackend(cfg, data, spec,
                          bounds=balanced_bounds(cfg, n_stages))
     keys = jax.random.split(key, n_stages + 2)
@@ -102,7 +106,9 @@ def run_mlp_fig5(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
     sils = [sil_lib.make_sil(keys[1 + k], backend.boundary_width(k),
                              cfg.n_classes, spec.kappa)
             for k in range(n_stages - 1)]
-    return Trainer(backend, spec).run(fig5_phases(), params=params,
+    phases = [ParallelSilPhase(plan=dist, devices=dist_devices,
+                               ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)]
+    return Trainer(backend, spec).run(phases, params=params,
                                       sils=sils)
 
 
@@ -129,9 +135,15 @@ def run_lm_sequential(cfg, plan, params, batch_fn: Callable[[int], dict],
 
 def run_lm_parallel(cfg, plan, params, batch_fn: Callable[[int], dict],
                     spec: TrainSpec, key, *, shard_x=None,
-                    grad_pspecs_fn=None):
-    """Fig.-5 all-parallel mode at transformer scale."""
+                    grad_pspecs_fn=None, dist=None, dist_devices=None,
+                    ckpt_dir=None, ckpt_every: int = 0):
+    """Fig.-5 all-parallel mode at transformer scale.
+
+    dist / dist_devices / ckpt_*: ``repro.dist`` routing — place each stage
+    on its own device and checkpoint each stage independently."""
     backend = LMBackend(cfg, plan, batch_fn, spec, shard_x=shard_x,
                         grad_pspecs_fn=grad_pspecs_fn)
-    return Trainer(backend, spec).run([ParallelSilPhase()], params=params,
+    phase = ParallelSilPhase(plan=dist, devices=dist_devices,
+                             ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+    return Trainer(backend, spec).run([phase], params=params,
                                       key=key)

@@ -132,10 +132,29 @@ class Trainer:
 
     def flush_losses(self, state: TrainState, pending: list,
                      steps_logged: list, phase_name, stage) -> None:
-        """One device->host transfer for a whole phase's loss curve."""
+        """One device->host transfer (per device) for a phase's loss curve.
+
+        The pending scalars may live on DIFFERENT devices (repro.dist
+        places each stage's step on its own device) and committed buffers
+        refuse to stack across devices — so scalars are stacked per
+        device-group and fetched in one transfer each.  The common
+        single-device case keeps the exact legacy one-stack-one-transfer
+        path."""
         if not pending:
             return
-        values = jax.device_get(jnp.stack(pending))
+        groups: dict = {}
+        for idx, leaf in enumerate(pending):
+            dev = tuple(sorted(map(str, leaf.devices()))) \
+                if isinstance(leaf, jax.Array) else None
+            groups.setdefault(dev, []).append(idx)
+        if len(groups) == 1:
+            values = jax.device_get(jnp.stack(pending))
+        else:
+            values = [None] * len(pending)
+            for idxs in groups.values():
+                got = jax.device_get(jnp.stack([pending[i] for i in idxs]))
+                for j, i in enumerate(idxs):
+                    values[i] = got[j]
         stages = stage if isinstance(stage, list) else [stage] * len(pending)
         names = phase_name if isinstance(phase_name, list) \
             else [phase_name] * len(pending)
