@@ -19,7 +19,7 @@ import jax  # noqa: E402
 
 from repro.data.images import load_emnist  # noqa: E402
 from repro.models.mlp import MLPConfig  # noqa: E402
-from repro.train import StageSpec, TrainSpec, recipes  # noqa: E402
+from repro.train import recipes  # noqa: E402
 
 
 def main():
@@ -34,12 +34,12 @@ def main():
     n_left, n_right = 5, 160 if args.full else 80
     n_base = 40 if args.full else 20
     n_rec = 10 if args.full else 5
-    spec = TrainSpec(
-        kappa=10.0, batch_size=1410,
-        stages=(StageSpec(epochs=n_left, lr=0.01, optimizer="sgdm"),
-                StageSpec(epochs=n_right, lr=0.003, optimizer="sgdm")),
-        baseline=StageSpec(epochs=n_base, lr=0.01, optimizer="sgdm"),
-        recovery=StageSpec(epochs=n_rec, lr=0.0003, optimizer="sgdm"))
+    # unshuffled epoch order, as the legacy trainers ran it (the verify
+    # paper-parity gate shuffles instead: it needs the momentum baseline
+    # to converge rather than oscillate before judging the accuracy gap)
+    spec = recipes.paper_spec(n_left=n_left, n_right=n_right,
+                              n_baseline=n_base, n_recovery=n_rec,
+                              shuffle=False)
 
     print(f"== baseline ({n_base} epochs) ==")
     _, hist_b = recipes.run_mlp_baseline(cfg, data, spec,

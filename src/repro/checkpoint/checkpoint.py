@@ -82,9 +82,20 @@ def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {directory}")
     z = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
-        manifest = json.load(f)
+    manifest_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise ValueError(f"corrupt/truncated manifest {manifest_path}: {e}"
+                         ) from None
     flat_like, treedef = _flatten_with_paths(like)
+    missing = [k for k in flat_like if k not in z.files]
+    if missing:
+        raise ValueError(
+            f"checkpoint step {step} in {directory} lacks arrays for "
+            f"{missing[:3]}{'...' if len(missing) > 3 else ''} "
+            f"(restore `like` tree does not match the saved tree)")
     leaves = []
     flat_shard = None
     if shardings is not None:

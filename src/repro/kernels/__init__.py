@@ -2,7 +2,20 @@
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (dispatching
 jit'd wrapper), ref.py (pure-jnp oracle used for tests and CPU lowering).
+
+``FAMILIES`` is the declarative kernel inventory: every family listed here
+must keep a registered kernel-vs-reference oracle in ``repro.verify``
+(asserted by tests/test_verify_oracles.py) — adding a kernel without its
+conformance contract is a test failure, not an oversight.
 """
 from .flash_attention import flash_attention, decode_attention  # noqa: F401
 from .selective_scan import selective_scan, selective_scan_step  # noqa: F401
 from .sil_mse import sil_mse  # noqa: F401
+
+# family name -> the entry points whose Pallas and reference paths the
+# repro.verify oracle registry must cover
+FAMILIES = {
+    "flash_attention": ("flash_attention", "decode_attention"),
+    "selective_scan": ("selective_scan",),
+    "sil_mse": ("sil_mse",),
+}

@@ -62,6 +62,33 @@ def lm_sequential_phases(n_stages: int, recovery: bool = True) -> list:
     return phases
 
 
+def paper_spec(*, n_left: int = 5, n_right: int = 160, n_baseline: int = 40,
+               n_recovery: int = 10, lr: float = 0.01, lr_right: float = 0.003,
+               lr_recovery: float = 3e-4, batch_size: int = 1410,
+               kappa: float = 10.0, momentum: float = 0.9,
+               shuffle: bool = True) -> TrainSpec:
+    """The paper's §3-§5 hyperparameters as one TrainSpec (defaults are the
+    published values; shrink the epoch counts for reduced-fidelity runs).
+    Shared by examples/quickstart.py and the repro.verify paper-parity
+    gate so the experiment definition can never fork.
+
+    shuffle defaults True (unlike the legacy trainers): with the fixed
+    epoch order the momentum baseline oscillates instead of converging on
+    the synthetic EMNIST stand-in, which would make every parity
+    comparison noise."""
+    from repro.train.spec import StageSpec
+    return TrainSpec(
+        kappa=kappa, batch_size=batch_size, shuffle=shuffle,
+        stages=(StageSpec(epochs=n_left, lr=lr, optimizer="sgdm",
+                          momentum=momentum),
+                StageSpec(epochs=n_right, lr=lr_right, optimizer="sgdm",
+                          momentum=momentum)),
+        baseline=StageSpec(epochs=n_baseline, lr=lr, optimizer="sgdm",
+                           momentum=momentum),
+        recovery=StageSpec(epochs=n_recovery, lr=lr_recovery,
+                           optimizer="sgdm", momentum=momentum))
+
+
 # --------------------------------------------------------------------------
 # MLP entry points (legacy key schedules preserved)
 # --------------------------------------------------------------------------

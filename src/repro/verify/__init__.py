@@ -1,0 +1,47 @@
+"""`repro.verify` — the declarative differential-oracle conformance
+subsystem.
+
+The paper's claim is an *equivalence* (partitioned SIL training matches
+conventional training), and the codebase has accumulated many more:
+kernels match their references, concurrent placement matches the
+sequential schedule, batched serving matches sequential decode, bf16
+matches fp32 within dtype tolerance, resume+replay matches uninterrupted
+training.  Instead of one bespoke test per claim, every contract is a
+registered ``Oracle`` — (reference path, optimized path, comparison
+policy) — runnable from pytest, from the ``launch/verify`` CLI sweep, or
+programmatically:
+
+    from repro.verify import all_oracles, run_oracle, Context
+
+    for oracle in all_oracles(tags=["serve"]):
+        result = run_oracle(oracle, Context(preset="tiny",
+                                            arch="qwen2-1.5b"))
+        print(result.name, result.ok)
+
+Modules:
+* ``compare``    — the tolerance-policy tiers (Bitwise / dtype-aware
+                   Allclose / AccuracyGap / TokensEqual).
+* ``oracle``     — Oracle/Context/registry/run_oracle.
+* ``scenarios``  — shared tiny-config builders (also the test fixtures).
+* ``oracles``    — the registered contracts (importing this package
+                   populates the registry).
+* ``paper``      — the end-to-end paper-parity gate (EMNIST 6-layer,
+                   2-stage SIL vs conventional; tiny and full presets).
+* ``report``     — machine-readable conformance reports for ``results/``.
+
+See docs/TESTING.md for how to add an oracle with a new feature.
+"""
+from repro.verify.compare import (AccuracyGap, Allclose, Bitwise,  # noqa: F401
+                                  TokensEqual, Verdict, tolerance_for)
+from repro.verify.oracle import (Context, Oracle, OracleResult,  # noqa: F401
+                                 all_oracles, get, register, run_oracle)
+from repro.verify.report import build_report, write_report  # noqa: F401
+
+# importing the contract definitions populates the registry
+from repro.verify import oracles as _oracles  # noqa: E402,F401
+
+__all__ = [
+    "AccuracyGap", "Allclose", "Bitwise", "TokensEqual", "Verdict",
+    "tolerance_for", "Context", "Oracle", "OracleResult", "all_oracles",
+    "get", "register", "run_oracle", "build_report", "write_report",
+]

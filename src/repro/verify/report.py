@@ -1,0 +1,52 @@
+"""Machine-readable conformance reports (``results/CONFORMANCE_*.json``).
+
+One report = one sweep of the oracle registry under one (preset, arch)
+context: environment stamp, per-oracle verdicts with measured errors and
+wall-clock, and the pass/fail tallies CI gates on.  The schema is
+versioned so downstream tooling (dashboards, the CI artifact diff) can
+evolve without guessing.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Sequence
+
+import jax
+
+from repro.verify.oracle import OracleResult
+
+SCHEMA = "repro.verify/1"
+
+
+def build_report(results: Sequence[OracleResult], *, preset: str,
+                 arch: str, extra: Optional[dict] = None) -> dict:
+    failed = [r.name for r in results if not r.ok]
+    report = {
+        "schema": SCHEMA,
+        "preset": preset,
+        "arch": arch,
+        "env": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "n_devices": len(jax.devices()),
+            "force_ref": os.environ.get("REPRO_FORCE_REF", ""),
+        },
+        "n_oracles": len(results),
+        "n_passed": sum(r.ok for r in results),
+        "n_failed": len(failed),
+        "failed": failed,
+        "oracles": [r.row() for r in results],
+    }
+    if extra:
+        report.update(extra)
+    return report
+
+
+def write_report(path: str, results: Sequence[OracleResult], *, preset: str,
+                 arch: str, extra: Optional[dict] = None) -> dict:
+    report = build_report(results, preset=preset, arch=arch, extra=extra)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    return report

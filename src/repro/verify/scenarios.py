@@ -1,0 +1,130 @@
+"""Shared tiny-config scenario builders.
+
+One place for the hand-built mini worlds that the conformance oracles AND
+the test suite both need: a reduced MLP training setup, a reduced
+PartitionPlan'd LM setup, a serving world, and the one-request-at-a-time
+greedy decode reference.  ``tests/conftest.py`` exposes these as fixtures;
+``repro.verify.oracles`` calls them directly — so an oracle and its
+corresponding test can never drift apart on setup.
+
+Everything here is deterministic (fixed seeds, pure batch functions) so the
+bitwise oracles stay bitwise.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.data.images import emnist_like
+from repro.models import model as M
+from repro.models.mlp import MLPConfig
+from repro.train import StageSpec, TrainSpec
+
+
+# --------------------------------------------------------------------------
+# MLP world (the paper's experiment, reduced)
+# --------------------------------------------------------------------------
+
+def tiny_mlp(n_stages: int = 3, epochs: Sequence[int] = (2, 2, 2), *,
+             n_train: int = 1024, n_test: int = 128, batch_size: int = 128,
+             lr: float = 0.01, kappa: float = 10.0, noise: float = 0.5,
+             sizes: Optional[Tuple[int, ...]] = None,
+             precision=None, baseline_epochs: Optional[int] = None,
+             seed: int = 0):
+    """(cfg, data, spec) for a fast CPU-sized paper-MLP experiment.
+
+    Defaults match the historical per-file setups in tests/test_dist.py;
+    ``sizes`` overrides the network (e.g. the smoke (784,32,16,16,47))."""
+    cfg = MLPConfig() if sizes is None else MLPConfig(sizes=sizes, cut=2)
+    data = emnist_like(n_train=n_train, n_test=n_test, seed=seed, noise=noise)
+    baseline = None if baseline_epochs is None else StageSpec(
+        epochs=baseline_epochs, lr=lr, optimizer="sgdm")
+    spec = TrainSpec(batch_size=batch_size, kappa=kappa, n_stages=n_stages,
+                     precision=precision, baseline=baseline,
+                     stages=tuple(StageSpec(epochs=e, lr=lr)
+                                  for e in epochs))
+    return cfg, data, spec
+
+
+# --------------------------------------------------------------------------
+# LM world (PartitionPlan over a smoke transformer)
+# --------------------------------------------------------------------------
+
+def tiny_lm(arch: str = "qwen2-1.5b", *, steps: int = 3, n_stages: int = 2,
+            accum: int = 1, batch: int = 2, seq: int = 32,
+            lr: float = 1e-3, kappa: float = 1.0, optimizer: str = "adamw",
+            param_seed: int = 0):
+    """(cfg, plan, batch_fn, spec, params) on the arch's smoke config.
+
+    ``batch_fn`` is a PURE function of the step index (the repro.dist
+    replay contract), keyed exactly as the historical test_dist setup."""
+    from repro.core import partition
+    cfg = get(arch, smoke=True)
+    plan = partition.make_plan(cfg, n_stages)
+
+    def batch_fn(i):
+        k = jax.random.PRNGKey(1000 + i)
+        toks = jax.random.randint(k, (batch, seq), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+
+    spec = TrainSpec(n_stages=n_stages, kappa=kappa,
+                     stages=tuple(StageSpec(steps=steps, lr=lr,
+                                            optimizer=optimizer, accum=accum)
+                                  for _ in range(n_stages)))
+    params = M.init_params(cfg, jax.random.PRNGKey(param_seed))
+    return cfg, plan, batch_fn, spec, params
+
+
+# --------------------------------------------------------------------------
+# serving world
+# --------------------------------------------------------------------------
+
+def serve_cfg(arch: str = "qwen2-1.5b", window: int = 0):
+    """Smoke config pinned to fp32 compute (token-identity contracts must
+    not ride on reduced-precision nondeterminism)."""
+    cfg = get(arch, smoke=True).replace(dtype="float32")
+    if window:
+        cfg = cfg.replace(sliding_window=window)
+    return cfg
+
+
+def serve_params(cfg, seed: int = 0):
+    return M.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def serve_requests(cfg, lens: Sequence[int] = (8, 12, 5, 10),
+                   news: Sequence[int] = (6, 9, 4, 7), *, seed: int = 0,
+                   gen_kw: Optional[dict] = None):
+    """Mixed-length prompts + mixed durations (staggers admits/retires)."""
+    from repro.serve import GenerationConfig, Request
+    rng = np.random.RandomState(seed)
+    kw = gen_kw or {}
+    return [Request(tokens=rng.randint(0, cfg.vocab_size, size=(ln,)),
+                    gen=GenerationConfig(max_new_tokens=nn, **kw),
+                    id=f"r{i}")
+            for i, (ln, nn) in enumerate(zip(lens, news))]
+
+
+def greedy_reference(cfg, params, req) -> Tuple[int, ...]:
+    """One-request-at-a-time reference: prefill + per-token python decode.
+
+    This is the trusted path every engine optimization (continuous batching,
+    fused chunks, staged deployment) must reproduce token-for-token."""
+    toks = jnp.asarray(np.asarray(req.tokens, np.int32)[None])
+    lc = toks.shape[1] + req.gen.max_new_tokens \
+        + (cfg.vision_tokens if cfg.frontend == "vision" else 0)
+    batch = {"tokens": toks}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.zeros((1, cfg.enc_seq, cfg.d_model))
+    logits, cache, pos = M.prefill(cfg, params, batch, cache_len=lc)
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    out = [int(tok[0])]
+    for i in range(req.gen.max_new_tokens - 1):
+        logits, cache = M.decode_step(cfg, params, cache, tok, pos + i)
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return tuple(out)

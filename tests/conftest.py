@@ -11,6 +11,7 @@ import pytest  # noqa: E402
 
 from repro.configs import get  # noqa: E402
 from repro.models import model as M  # noqa: E402
+from repro.verify import scenarios  # noqa: E402
 
 
 def make_batch(cfg, b=2, s=16, key=0):
@@ -40,3 +41,35 @@ def smoke_params_cache():
             cache[name] = (cfg, M.init_params(cfg, jax.random.PRNGKey(0)))
         return cache[name]
     return get_params
+
+
+# --------------------------------------------------------------------------
+# shared tiny-config worlds (repro.verify.scenarios — the same builders the
+# conformance oracles use, so tests and oracles can never drift on setup)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="session")
+def tiny_mlp():
+    """Factory: (cfg, data, spec) for a CPU-sized paper-MLP experiment."""
+    return scenarios.tiny_mlp
+
+
+@pytest.fixture(scope="session")
+def tiny_lm():
+    """Factory: (cfg, plan, batch_fn, spec, params) on a smoke LM config."""
+    return scenarios.tiny_lm
+
+
+@pytest.fixture(scope="session")
+def serve_world():
+    """Factory: (cfg, params) for serving tests, cached per (arch, window,
+    seed) across the whole session — param init used to be re-run per test."""
+    cache = {}
+
+    def get_world(arch="qwen2-1.5b", window=0, seed=0):
+        key = (arch, window, seed)
+        if key not in cache:
+            cfg = scenarios.serve_cfg(arch, window)
+            cache[key] = (cfg, scenarios.serve_params(cfg, seed))
+        return cache[key]
+    return get_world

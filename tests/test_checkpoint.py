@@ -1,0 +1,97 @@
+"""Checkpoint restore error paths + dist lifecycle failure modes.
+
+A restore that cannot succeed must fail loudly and say why: a truncated
+manifest, a `like` tree that does not match the saved arrays, a missing
+stage directory, and a mismatched shardings tree each get their own
+message instead of a stray KeyError/JSONDecodeError deep in numpy.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.dist import lifecycle
+
+TREE = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "h": jnp.ones((3,), jnp.bfloat16) * 1.5,
+        "nested": [{"b": jnp.zeros((2,), jnp.float32)}]}
+
+
+def test_roundtrip_and_latest_step(tmp_path):
+    save_checkpoint(str(tmp_path), 3, TREE)
+    save_checkpoint(str(tmp_path), 7, TREE)
+    assert latest_step(str(tmp_path)) == 7
+    out = restore_checkpoint(str(tmp_path), TREE)
+    assert out["h"].dtype == jnp.bfloat16       # uint16-view round trip
+    for a, b in zip(jax.tree_util.tree_leaves(TREE),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        restore_checkpoint(str(tmp_path / "nowhere"), TREE)
+
+
+def test_restore_truncated_manifest_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, TREE)
+    manifest = tmp_path / "ckpt_00000001.json"
+    text = manifest.read_text()
+    manifest.write_text(text[: len(text) // 2])      # simulated torn write
+    with pytest.raises(ValueError, match="corrupt/truncated manifest"):
+        restore_checkpoint(str(tmp_path), TREE)
+
+
+def test_restore_mismatched_like_tree_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": TREE["w"]})
+    bigger = {"w": TREE["w"], "extra": jnp.zeros((2,), jnp.float32)}
+    with pytest.raises(ValueError, match="lacks arrays for"):
+        restore_checkpoint(str(tmp_path), bigger)
+
+
+def test_restore_mismatched_shardings_tree_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, TREE)
+    dev = jax.devices()[0]
+    with pytest.raises(ValueError, match="shardings tree lacks leaves"):
+        restore_checkpoint(str(tmp_path), TREE, shardings={"w": dev})
+
+
+def test_restore_single_device_broadcast(tmp_path):
+    save_checkpoint(str(tmp_path), 1, TREE)
+    dev = jax.devices()[-1]
+    out = restore_checkpoint(str(tmp_path), TREE, shardings=dev)
+    for leaf in jax.tree_util.tree_leaves(out):
+        assert isinstance(leaf, jax.Array)
+        assert leaf.devices() == {dev}
+
+
+# -- dist lifecycle ---------------------------------------------------------
+
+def test_restore_stage_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no checkpoints for stage"):
+        lifecycle.restore_stage(str(tmp_path), 2, like_params=TREE)
+
+
+def test_stage_ticks_reports_missing_stages(tmp_path):
+    lifecycle.save_stage(str(tmp_path), 0, 4, {"w": TREE["w"]})
+    assert lifecycle.stage_ticks(str(tmp_path), 3) == [4, None, None]
+
+
+def test_save_stage_manifest_metadata(tmp_path):
+    lifecycle.save_stage(str(tmp_path), 1, 5, {"w": TREE["w"]},
+                         metadata={"kind": "mlp"})
+    d = lifecycle.stage_dir(str(tmp_path), 1)
+    with open(os.path.join(d, "ckpt_00000005.json")) as f:
+        manifest = json.load(f)
+    assert manifest["metadata"]["stage"] == 1
+    assert manifest["metadata"]["tick"] == 5
+    assert manifest["metadata"]["kind"] == "mlp"
+    params, opt, tick = lifecycle.restore_stage(
+        str(tmp_path), 1, like_params={"w": TREE["w"]})
+    assert tick == 5 and opt is None
+    np.testing.assert_array_equal(np.asarray(params["w"]),
+                                  np.asarray(TREE["w"]))

@@ -131,37 +131,8 @@ def test_restore_checkpoint_single_device_broadcast(tmp_path):
 # fixtures for the executor tests
 # ==========================================================================
 
-def _mlp_setup(n_stages=3, epochs=(2, 2, 2)):
-    from repro.data.images import emnist_like
-    from repro.models.mlp import MLPConfig
-    from repro.train import StageSpec, TrainSpec
-    cfg = MLPConfig()
-    data = emnist_like(n_train=1024, n_test=128, seed=0, noise=0.5)
-    spec = TrainSpec(batch_size=128, kappa=10.0, n_stages=n_stages,
-                     stages=tuple(StageSpec(epochs=e, lr=0.01)
-                                  for e in epochs))
-    return cfg, data, spec
-
-
-def _lm_setup(steps=3, n_stages=2, accum=1):
-    from repro.configs import get
-    from repro.core import partition
-    from repro.models import model as M
-    from repro.train import StageSpec, TrainSpec
-    cfg = get("qwen2-1.5b", smoke=True)
-    plan = partition.make_plan(cfg, n_stages)
-
-    def batch_fn(i):
-        k = jax.random.PRNGKey(1000 + i)
-        toks = jax.random.randint(k, (2, 32), 0, cfg.vocab_size)
-        return {"tokens": toks, "labels": toks}
-
-    spec = TrainSpec(n_stages=n_stages, kappa=1.0,
-                     stages=tuple(StageSpec(steps=steps, lr=1e-3,
-                                            optimizer="adamw", accum=accum)
-                                  for _ in range(n_stages)))
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    return cfg, plan, batch_fn, spec, params
+# setup comes from the shared conftest fixtures (`tiny_mlp` / `tiny_lm` —
+# the same repro.verify.scenarios builders the conformance oracles use)
 
 
 # ==========================================================================
@@ -169,9 +140,9 @@ def _lm_setup(steps=3, n_stages=2, accum=1):
 # ==========================================================================
 
 @multi_device
-def test_mlp_concurrent_matches_sequential():
+def test_mlp_concurrent_matches_sequential(tiny_mlp):
     from repro.train import recipes
-    cfg, data, spec = _mlp_setup()
+    cfg, data, spec = tiny_mlp()
     key = jax.random.PRNGKey(0)
     p_seq, _ = recipes.run_mlp_fig5(cfg, data, spec, key, n_stages=3)
     p_con, _ = recipes.run_mlp_fig5(cfg, data, spec, key, n_stages=3,
@@ -180,9 +151,9 @@ def test_mlp_concurrent_matches_sequential():
 
 
 @multi_device
-def test_mlp_memory_placement_matches_sequential():
+def test_mlp_memory_placement_matches_sequential(tiny_mlp):
     from repro.train import recipes
-    cfg, data, spec = _mlp_setup(epochs=(1, 1, 1))
+    cfg, data, spec = tiny_mlp(epochs=(1, 1, 1))
     key = jax.random.PRNGKey(2)
     p_seq, _ = recipes.run_mlp_fig5(cfg, data, spec, key, n_stages=3)
     p_con, _ = recipes.run_mlp_fig5(cfg, data, spec, key, n_stages=3,
@@ -191,11 +162,11 @@ def test_mlp_memory_placement_matches_sequential():
 
 
 @multi_device
-def test_lm_concurrent_matches_sequential():
+def test_lm_concurrent_matches_sequential(tiny_lm):
     from repro.train import recipes
     # accum=2: both paths must microbatch identically (the sequential path
     # used to drop StageSpec.accum in ParallelSil)
-    cfg, plan, batch_fn, spec, params = _lm_setup(accum=2)
+    cfg, plan, batch_fn, spec, params = tiny_lm(accum=2)
     key = jax.random.PRNGKey(1)
     p_seq, h_seq = recipes.run_lm_parallel(cfg, plan, params, batch_fn,
                                            spec, key)
@@ -208,12 +179,12 @@ def test_lm_concurrent_matches_sequential():
 
 
 @multi_device
-def test_frozen_prefix_producer_consumer_devices():
+def test_frozen_prefix_producer_consumer_devices(tiny_lm):
     """BoundaryMaterialize/FrozenPrefix route producer and consumer to
     distinct devices without changing the math."""
     from repro.train import (FrozenPrefixPhase, LMBackend, SilStagePhase,
                              Trainer)
-    cfg, plan, batch_fn, spec, params = _lm_setup(steps=2)
+    cfg, plan, batch_fn, spec, params = tiny_lm(steps=2)
 
     def run(dist_plan):
         be = LMBackend(cfg, plan, batch_fn, spec)
@@ -233,10 +204,10 @@ def test_frozen_prefix_producer_consumer_devices():
 # ==========================================================================
 
 @multi_device
-def test_stage_failure_resume_join_bit_consistent(tmp_path):
+def test_stage_failure_resume_join_bit_consistent(tmp_path, tiny_lm):
     from repro.train import LMBackend
     root = str(tmp_path / "stages")
-    cfg, plan, batch_fn, spec, params = _lm_setup(steps=4)
+    cfg, plan, batch_fn, spec, params = tiny_lm(steps=4)
     be = LMBackend(cfg, plan, batch_fn, spec)
     sils = be.make_sils(jax.random.PRNGKey(1), spec.kappa)
     sp0 = be.split(params)
@@ -289,12 +260,12 @@ def test_stage_failure_resume_join_bit_consistent(tmp_path):
         _leaves_equal(sps[k], ref[k])
 
 
-def test_dist_rejects_mesh_sharding_hooks():
+def test_dist_rejects_mesh_sharding_hooks(tiny_lm):
     """plan= must fail loudly when the backend carries Policy sharding
     hooks — the executor would silently skip the caller's
     with_sharding_constraint pass otherwise."""
     from repro.train import LMBackend, ParallelSilPhase, Trainer
-    cfg, plan, batch_fn, spec, params = _lm_setup(steps=1)
+    cfg, plan, batch_fn, spec, params = tiny_lm(steps=1)
     be = LMBackend(cfg, plan, batch_fn, spec,
                    grad_pspecs_fn=lambda tree: tree)
     with pytest.raises(ValueError, match="sharding hooks"):
@@ -315,14 +286,14 @@ def test_lm_batch_at_is_pure():
 
 
 @multi_device
-def test_parallel_phase_dist_checkpoints_independent_ticks(tmp_path):
+def test_parallel_phase_dist_checkpoints_independent_ticks(tmp_path, tiny_mlp):
     """ParallelSilPhase(plan=..., ckpt_dir=...) leaves one manifest per
     stage with that stage's OWN tick counter (heterogeneous durations)."""
     from repro.models import mlp as MLP
     from repro.train import MLPBackend, ParallelSilPhase, Trainer
     from repro.train.backends import balanced_bounds
     root = str(tmp_path / "mlp_stages")
-    cfg, data, spec = _mlp_setup(epochs=(1, 2, 3))
+    cfg, data, spec = tiny_mlp(epochs=(1, 2, 3))
     be = MLPBackend(cfg, data, spec, bounds=balanced_bounds(cfg, 3))
     params = MLP.init_params(cfg, jax.random.PRNGKey(0))
     phase = ParallelSilPhase(plan="round_robin", ckpt_dir=root)

@@ -1,4 +1,15 @@
-"""Hypothesis property-based tests on the system's invariants."""
+"""Hypothesis property-based tests on the system's invariants.
+
+hypothesis is a CI dependency (see .github/workflows/ci.yml) — these run on
+every CI push; the importorskip only spares ad-hoc local environments that
+never installed it.
+
+Strategy groups: partition-boundary shapes (any stage count over any layer
+stack composes back to the full forward), SIL tables (label dtypes/ranges/
+shapes and table dtype survive the lookup), scheduler admit/retire
+sequences (random interleavings never leak or double-book a slot), plus the
+numeric invariants (RoPE norms, CE bounds, kappa scaling, attention refs).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +18,7 @@ import pytest
 pytest.importorskip("hypothesis")   # optional dep; skip, don't error
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import partition, sil as sil_lib
+from repro.core import sil as sil_lib
 from repro.core.losses import cross_entropy
 from repro.models import layers as L
 from repro.models import mlp as MLP
@@ -39,6 +50,47 @@ def test_partition_plan_properties(g, k):
     sizes = [base + (1 if i < rem else 0) for i in range(k)]
     assert sum(sizes) == g
     assert max(sizes) - min(sizes) <= 1
+
+
+@given(n_layers=st.integers(1, 24), n_stages=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_balanced_bounds_invariants(n_layers, n_stages):
+    """Partition-boundary shapes: contiguous, cover [0, n_layers), balanced
+    within one layer, and the 2-stage default is the paper's cut."""
+    from repro.train.backends import balanced_bounds, mlp_default_bounds
+    if n_stages > n_layers:
+        return
+    sizes = tuple([16] * (n_layers + 1))
+    cfg = MLP.MLPConfig(sizes=sizes, cut=max(1, n_layers // 2), n_classes=16)
+    bounds = balanced_bounds(cfg, n_stages)
+    assert bounds[0][0] == 0 and bounds[-1][1] == n_layers
+    for (a0, a1), (b0, b1) in zip(bounds, bounds[1:]):
+        assert a1 == b0 and a1 > a0          # contiguous, non-empty
+    widths = [b1 - b0 for b0, b1 in bounds]
+    assert max(widths) - min(widths) <= 1
+    two = mlp_default_bounds(cfg, 2)
+    assert two == ((0, cfg.cut), (cfg.cut, cfg.n_layers))
+
+
+@given(layers=st.lists(st.integers(4, 16), min_size=3, max_size=6),
+       n_stages=st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_mlp_multi_stage_chain_equals_full(layers, n_stages):
+    """forward_range composed over ANY balanced stage split == the full
+    forward (the boundary-shape contract every phase relies on)."""
+    from repro.train.backends import balanced_bounds
+    sizes = tuple([12] + layers + [8])
+    cfg = MLP.MLPConfig(sizes=sizes, cut=1, n_classes=8)
+    if n_stages > cfg.n_layers:
+        return
+    params = MLP.init_params(cfg, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 12))
+    h = x
+    for b0, b1 in balanced_bounds(cfg, n_stages):
+        h = MLP.forward_range(cfg, params[b0:b1], h, b0, b1)
+    full = MLP.forward(cfg, params, x)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(full), rtol=1e-5,
+                               atol=1e-5)
 
 
 @given(layers=st.lists(st.integers(4, 32), min_size=2, max_size=6),
@@ -97,6 +149,64 @@ def test_sil_loss_scales_quadratically(kappa, lr_scale):
     l1 = float(sil_stage_loss(act, sil1, lab))
     l2 = float(sil_stage_loss(act, sil2, lab))
     assert abs(l2 / l1 - 4.0) < 1e-3
+
+
+@given(n=st.integers(2, 64), m=st.integers(2, 64),
+       batch_shape=st.sampled_from([(7,), (2, 5), (3, 2, 2)]),
+       label_dtype=st.sampled_from([np.int8, np.int16, np.int32, np.int64]),
+       table_dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+@settings(max_examples=20, deadline=None)
+def test_sil_lookup_dtypes_and_ranges(n, m, batch_shape, label_dtype,
+                                      table_dtype):
+    """SIL lookups must work for any int label dtype and label shape, keep
+    the table's dtype (bf16 tables stay bf16 on the way to the loss), and
+    return exactly the labelled columns."""
+    if m > np.iinfo(label_dtype).max:
+        return
+    sil = sil_lib.make_sil(jax.random.PRNGKey(0), n, m, 10.0,
+                           dtype=table_dtype)
+    assert sil.dtype == table_dtype
+    rng = np.random.RandomState(1)
+    labels = rng.randint(0, m, size=batch_shape).astype(label_dtype)
+    out = sil_lib.sil_lookup(sil, jnp.asarray(labels))
+    assert out.shape == batch_shape + (n,)
+    assert out.dtype == table_dtype
+    flat = labels.reshape(-1)
+    got = np.asarray(out, np.float32).reshape(len(flat), n)
+    want = np.asarray(sil, np.float32).T[flat]
+    np.testing.assert_array_equal(got, want)
+
+
+@given(n_slots=st.integers(1, 4),
+       choices=st.lists(st.booleans(), min_size=1, max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_scheduler_random_admit_retire_sequences(n_slots, choices):
+    """Any admit/retire interleaving preserves the slot partition (free +
+    active == all slots, enforced per transition by the audit), never
+    double-books, and the event log balances."""
+    from repro.serve.scheduler import Scheduler
+
+    class _Req:
+        class gen:
+            max_new_tokens = 4
+
+    sched = Scheduler(n_slots)
+    admitted = 0
+    for want_admit in choices:
+        if want_admit and sched.free:
+            slot = sched.admit(admitted, _Req(), n_prompt=3)
+            assert slot in sched.active and slot not in sched.free
+            admitted += 1
+        elif sched.active:
+            slot = sorted(sched.active)[0]
+            st_ = sched.retire(slot)
+            assert slot in sched.free and slot not in sched.active
+            assert st_.remaining == 4
+    assert len(sched.free) + len(sched.active) == n_slots
+    admits = sum(1 for e, _ in sched.events if e == "admit")
+    retires = sum(1 for e, _ in sched.events if e == "retire")
+    assert admits - retires == len(sched.active)
+    assert sched.max_concurrent <= n_slots
 
 
 @given(seq=st.integers(1, 64), window=st.sampled_from([0, 8, 16]))

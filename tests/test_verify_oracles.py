@@ -1,0 +1,125 @@
+"""The conformance-oracle collector: every oracle registered in
+`repro.verify` is auto-parametrized into pytest, so a new equivalence
+contract becomes a test by registration alone.
+
+Plus unit tests for the comparison-policy tiers themselves (the judges
+must be trustworthy before the judged).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.verify import (AccuracyGap, Allclose, Bitwise, Context,
+                          TokensEqual, all_oracles, build_report, get,
+                          run_oracle, tolerance_for)
+
+ORACLE_NAMES = [o.name for o in all_oracles()]
+
+
+# ==========================================================================
+# the collector: one pytest item per registered oracle
+# ==========================================================================
+
+def test_registry_covers_the_contract_surface():
+    """The ISSUE-5 floor: >= 7 oracles, spanning every subsystem group."""
+    assert len(ORACLE_NAMES) >= 7
+    groups = {n.split("/")[0] for n in ORACLE_NAMES}
+    assert {"kernel", "train", "serve", "precision", "checkpoint",
+            "paper"} <= groups
+
+
+def test_every_kernel_family_has_an_oracle():
+    """Adding a Pallas kernel without registering its kernel-vs-reference
+    contract must fail here, not rot silently."""
+    from repro.kernels import FAMILIES
+    kernel_oracles = {n.split("/", 1)[1] for n in ORACLE_NAMES
+                      if n.startswith("kernel/")}
+    for family, entry_points in FAMILIES.items():
+        for entry in entry_points:
+            assert entry in kernel_oracles, \
+                f"kernel entry point {family}/{entry} has no oracle"
+
+
+@pytest.mark.parametrize("name", ORACLE_NAMES)
+def test_oracle_conformance(name, tmp_path):
+    oracle = get(name)
+    res = run_oracle(oracle, Context(preset="tiny", workdir=str(tmp_path)))
+    detail = res.error or (res.verdict.detail if res.verdict else "")
+    assert res.ok, f"{name} violated its contract: {detail}"
+
+
+def test_run_oracle_captures_exceptions():
+    from repro.verify.oracle import Oracle
+
+    def boom(ctx):
+        raise RuntimeError("injected failure")
+    o = Oracle(name="x/boom", contract="always fails", run=boom,
+               policy=Bitwise())
+    res = run_oracle(o)
+    assert not res.ok and "injected failure" in res.error
+    assert "error" in res.row()
+
+
+def test_report_schema_and_write(tmp_path):
+    import json
+
+    from repro.verify import write_report
+    res = run_oracle(get("kernel/sil_mse"), Context(preset="tiny"))
+    report = build_report([res], preset="tiny", arch="qwen2-1.5b")
+    assert report["schema"] == "repro.verify/1"
+    assert report["n_oracles"] == 1
+    assert report["n_passed"] + report["n_failed"] == 1
+    row = report["oracles"][0]
+    assert {"name", "ok", "seconds"} <= set(row)
+    path = str(tmp_path / "CONFORMANCE.json")
+    write_report(path, [res], preset="tiny", arch="qwen2-1.5b",
+                 extra={"note": "unit"})
+    with open(path) as f:
+        on_disk = json.load(f)
+    assert on_disk["oracles"] == report["oracles"]
+    assert on_disk["note"] == "unit"
+
+
+# ==========================================================================
+# the comparison policies
+# ==========================================================================
+
+def test_bitwise_catches_single_bit():
+    a = {"w": np.arange(8, dtype=np.float32)}
+    assert Bitwise().compare(a, {"w": a["w"].copy()}).ok
+    b = a["w"].copy()
+    b[3] = np.nextafter(b[3], np.inf)
+    v = Bitwise().compare(a, {"w": b})
+    assert not v.ok and v.metrics["n_diff"] == 1
+
+
+def test_allclose_tolerance_is_dtype_aware():
+    assert tolerance_for(jnp.float32) == (1e-5, 1e-6)
+    assert tolerance_for(jnp.bfloat16) == (2e-2, 2e-2)
+    # the WIDEST dtype on either side decides
+    assert tolerance_for(jnp.float32, jnp.bfloat16) == (2e-2, 2e-2)
+    a32 = np.ones((4,), np.float32)
+    # a 1e-3 error fails at fp32 tolerance...
+    v = Allclose().compare({"x": a32}, {"x": a32 + 1e-3})
+    assert not v.ok and v.metrics["rtol"] == 1e-5
+    # ...but the same arrays in bf16 are judged at bf16 tolerance
+    a16 = jnp.ones((4,), jnp.bfloat16)
+    assert Allclose().compare({"x": a16}, {"x": a16 + 1e-3}).ok
+
+
+def test_allclose_int_leaves_must_match_exactly():
+    assert not Allclose().compare({"i": np.array([1, 2])},
+                                  {"i": np.array([1, 3])}).ok
+
+
+def test_accuracy_gap_budget_and_floor():
+    p = AccuracyGap(budget=0.02, floor=0.5)
+    assert p.compare(0.90, 0.89).ok
+    assert not p.compare(0.90, 0.85).ok        # gap over budget
+    assert not p.compare(0.10, 0.10).ok        # both at chance: not parity
+
+
+def test_tokens_equal():
+    assert TokensEqual().compare([(1, 2, 3)], [(1, 2, 3)]).ok
+    assert not TokensEqual().compare([(1, 2, 3)], [(1, 2, 4)]).ok
+    assert not TokensEqual().compare([(1, 2)], [(1, 2), (3,)]).ok
