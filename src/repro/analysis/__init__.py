@@ -1,0 +1,24 @@
+"""repro.analysis — static hot-path lint + Pallas kernel checker.
+
+Two front ends over one rule registry (the ``verify.Oracle`` pattern):
+
+* **trace lint** — traces registered hot-path entry points to jaxprs and
+  checks host-transfer freedom, dtype-policy conformance, buffer-donation
+  coverage, and recompile hazards (``rules_trace``);
+* **pallas checker** — validates every kernel family's declarative
+  ``KernelPlan`` (grid divisibility, index-map bounds, accumulator dtypes,
+  dispatch symmetry) without executing kernels (``rules_pallas``);
+
+plus an AST-level source lint (``repro.analysis.source``) banning host-sync
+idioms in hot-path modules.
+
+This package root imports only the jax-free core so ``repro.analysis.source``
+stays usable in jax-less environments (CI's lint job).  The CLI —
+``python -m repro.launch.analyze`` — loads the jax-backed rule modules.
+"""
+from repro.analysis.core import (AnalysisContext, Finding, Rule, RuleResult,
+                                 SEVERITIES, all_rules, get_rule, register,
+                                 run_rule)
+
+__all__ = ["AnalysisContext", "Finding", "Rule", "RuleResult", "SEVERITIES",
+           "all_rules", "get_rule", "register", "run_rule"]

@@ -1,0 +1,136 @@
+"""Rule registry core for repro.analysis — deliberately jax-free.
+
+Mirrors the ``repro.verify`` Oracle registry one-for-one (frozen
+descriptor dataclass, duplicate-rejecting ``register``, name-sorted
+``all_rules``, a ``run_rule`` wrapper that turns exceptions into result
+rows) so the two subsystems read the same.  The split from the jax-touching
+modules is load-bearing: the AST source lint (``repro.analysis.source``)
+must run in environments that only have the stdlib — CI's lint job installs
+ruff and nothing else — so this module and ``source`` import no third-party
+code.  Everything jaxpr-shaped lives in ``trace`` / ``rules_trace`` /
+``rules_pallas`` and is pulled in lazily by the CLI.
+
+A ``Rule`` inspects static artifacts (jaxprs, KernelPlans, source text) and
+emits ``Finding``s.  Severity contract:
+
+* ``fail`` — violates a hot-path invariant; CI gates on these.
+* ``warn`` — suspicious but has known-legitimate instances; reported,
+  never gating.
+* ``info`` — measurement the rule wants on the record (e.g. donated-bytes
+  accounting) with nothing wrong.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+SEVERITIES = ("info", "warn", "fail")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One observation by one rule against one target."""
+    rule: str
+    severity: str          # "info" | "warn" | "fail"
+    target: str            # entry point / kernel family / file:line
+    message: str
+    evidence: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity {self.severity!r} not in {SEVERITIES}")
+
+    def row(self) -> Dict[str, Any]:
+        return {"rule": self.rule, "severity": self.severity,
+                "target": self.target, "message": self.message,
+                "evidence": self.evidence}
+
+
+@dataclass(frozen=True)
+class Rule:
+    """A named static check.  ``run(ctx) -> Sequence[Finding]``."""
+    name: str
+    doc: str
+    run: Callable[["AnalysisContext"], Sequence[Finding]]
+    tags: Tuple[str, ...] = ()
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(name: str, doc: str, *, tags: Sequence[str] = ()):
+    """Decorator: add a rule function to the registry (duplicates rejected)."""
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate rule {name!r}")
+        _REGISTRY[name] = Rule(name=name, doc=doc, run=fn, tags=tuple(tags))
+        return fn
+    return deco
+
+
+def get_rule(name: str) -> Rule:
+    return _REGISTRY[name]
+
+
+def all_rules(tags: Sequence[str] = ()) -> List[Rule]:
+    rules = sorted(_REGISTRY.values(), key=lambda r: r.name)
+    if tags:
+        want = set(tags)
+        rules = [r for r in rules if want & set(r.tags)]
+    return rules
+
+
+class AnalysisContext:
+    """Per-run state handed to every rule.
+
+    ``arch`` is a configs name ("paper_mlp", "qwen2-1.5b", ...);
+    ``precision`` the policy preset the hot paths are checked under.
+    ``cache`` is a scratch dict rules share — the trace rules stash built
+    entry-point artifacts there so each target is traced once per run,
+    not once per rule.
+    """
+
+    def __init__(self, arch: str = "qwen2-1.5b", precision: str = "bf16"):
+        self.arch = arch
+        self.precision = precision
+        self.cache: Dict[str, Any] = {}
+
+
+@dataclass(frozen=True)
+class RuleResult:
+    name: str
+    ok: bool                      # no fail-severity findings and no crash
+    seconds: float
+    findings: Tuple[Finding, ...] = ()
+    error: Optional[str] = None
+
+    @property
+    def n_fail(self) -> int:
+        return sum(f.severity == "fail" for f in self.findings)
+
+    @property
+    def n_warn(self) -> int:
+        return sum(f.severity == "warn" for f in self.findings)
+
+    def row(self) -> Dict[str, Any]:
+        return {"rule": self.name, "ok": self.ok,
+                "seconds": round(self.seconds, 3),
+                "n_fail": self.n_fail, "n_warn": self.n_warn,
+                "findings": [f.row() for f in self.findings],
+                "error": self.error}
+
+
+def run_rule(rule: Rule, ctx: AnalysisContext) -> RuleResult:
+    """Execute one rule; a crash is a failed result, not a crashed run."""
+    t0 = time.perf_counter()
+    try:
+        findings = tuple(rule.run(ctx))
+    except Exception:
+        return RuleResult(name=rule.name, ok=False,
+                          seconds=time.perf_counter() - t0,
+                          error=traceback.format_exc(limit=8))
+    ok = not any(f.severity == "fail" for f in findings)
+    return RuleResult(name=rule.name, ok=ok,
+                      seconds=time.perf_counter() - t0, findings=findings)

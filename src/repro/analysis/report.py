@@ -1,0 +1,65 @@
+"""Schema-versioned analysis reports (mirrors ``repro.verify.report``).
+
+``results/ANALYSIS_<pr>.json`` is the machine-readable artifact CI uploads;
+the schema string is the compatibility contract — bump it when row shapes
+change, never silently.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.core import RuleResult
+
+SCHEMA = "repro.analysis/1"
+
+
+def _env_stamp() -> Dict:
+    try:
+        import jax
+        return {"jax": jax.__version__, "backend": jax.default_backend(),
+                "n_devices": len(jax.devices()),
+                "assume_donation": os.environ.get("REPRO_ASSUME_DONATION",
+                                                  ""),
+                "force_ref": os.environ.get("REPRO_FORCE_REF", "")}
+    except Exception:           # source-lint-only environments have no jax
+        return {"jax": None}
+
+
+def build_report(results_by_arch: Dict[str, Sequence[RuleResult]],
+                 extra: Optional[Dict] = None) -> Dict:
+    """{arch: [RuleResult]} -> the ANALYSIS_*.json payload."""
+    rows: List[Dict] = []
+    for arch, results in sorted(results_by_arch.items()):
+        for r in results:
+            row = r.row()
+            row["arch"] = arch
+            rows.append(row)
+    n_fail = sum(r["n_fail"] for r in rows)
+    n_warn = sum(r["n_warn"] for r in rows)
+    errors = sorted({r["rule"] for r in rows if r["error"]})
+    report = {
+        "schema": SCHEMA,
+        "env": _env_stamp(),
+        "archs": sorted(results_by_arch),
+        "n_rules": len({r["rule"] for r in rows}),
+        "n_fail_findings": n_fail,
+        "n_warn_findings": n_warn,
+        "rules_errored": errors,
+        "ok": n_fail == 0 and not errors,
+        "results": rows,
+    }
+    if extra:
+        report.update(extra)
+    return report
+
+
+def write_report(report: Dict, path: str) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path

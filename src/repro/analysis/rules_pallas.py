@@ -1,0 +1,192 @@
+"""Pallas kernel static checker: validate every family's KernelPlan.
+
+The kernels expose their launch geometry as pure ``plan()`` functions
+(``repro.kernels.plan.KernelPlan``) — the same plans the ``*_tpu`` entry
+points consume at call time.  That single-source-of-truth is what makes a
+*static* checker possible: these rules validate the exact grid / BlockSpec /
+scratch geometry a TPU launch would use, on a CPU host, without executing
+(or even lowering) a kernel.
+
+Shapes come from the arch's config: attention geometry from
+(n_heads, n_kv_heads, hd), the SSM scan from (expand * d_model, d_state),
+SIL-MSE from (tokens, d_model, vocab).  Both the smoke and the full-size
+config are checked — padding bugs tend to hide at full size.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List
+
+import numpy as np
+
+from repro.analysis.core import AnalysisContext, Finding, register
+from repro.configs import get
+from repro.kernels import FAMILIES
+from repro.kernels.dispatch import decide
+from repro.kernels.plan import KernelPlan
+from repro.models.mlp import MLPConfig
+
+
+def build_plans(ctx: AnalysisContext) -> List[KernelPlan]:
+    """KernelPlans for every family applicable to ctx.arch (smoke + full)."""
+    key = f"plans:{ctx.arch}"
+    if key in ctx.cache:
+        return ctx.cache[key]
+    from repro.kernels.flash_attention import kernel as fa
+    from repro.kernels.selective_scan import kernel as ssm
+    from repro.kernels.sil_mse import kernel as sm
+    plans: List[KernelPlan] = []
+    for smoke in (True, False):
+        cfg = get(ctx.arch, smoke=smoke)
+        if isinstance(cfg, MLPConfig):
+            # smoke batch vs the paper's full batch (1410, §3)
+            plans.append(sm.plan(64 if smoke else 1410, cfg.boundary_width,
+                                 cfg.n_classes))
+            continue
+        b, s = (2, 32) if smoke else (1, 512)
+        plans.append(fa.plan(b, s, s, cfg.n_heads, cfg.n_kv_heads, cfg.hd))
+        plans.append(fa.decode_plan(4, s + 32, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.hd))
+        if cfg.ssm is not None:
+            plans.append(ssm.plan(b, s, cfg.ssm.expand * cfg.d_model,
+                                  cfg.ssm.d_state))
+        plans.append(sm.plan(b * s, cfg.d_model, cfg.vocab_size))
+    ctx.cache[key] = plans
+    return plans
+
+
+@register("pallas/grid_divisibility",
+          "Every BlockPlan's (padded) array shape divides into whole blocks "
+          "and the grid is positive.", tags=("pallas",))
+def grid_divisibility(ctx: AnalysisContext) -> List[Finding]:
+    out = []
+    for kp in build_plans(ctx):
+        tgt = f"{kp.family}.{kp.entry}"
+        if not kp.grid or any(g < 1 for g in kp.grid):
+            out.append(Finding(
+                rule="pallas/grid_divisibility", severity="fail", target=tgt,
+                message=f"degenerate grid {kp.grid}",
+                evidence={"grid": list(kp.grid)}))
+        for bp in kp.blocks:
+            if len(bp.block_shape) != len(bp.array_shape):
+                out.append(Finding(
+                    rule="pallas/grid_divisibility", severity="fail",
+                    target=tgt,
+                    message=f"{bp.name}: block rank {len(bp.block_shape)} "
+                            f"!= array rank {len(bp.array_shape)}",
+                    evidence={"block": list(bp.block_shape),
+                              "array": list(bp.array_shape)}))
+                continue
+            bad = [i for i, (blk, arr) in
+                   enumerate(zip(bp.block_shape, bp.array_shape))
+                   if blk < 1 or arr % blk]
+            if bad:
+                out.append(Finding(
+                    rule="pallas/grid_divisibility", severity="fail",
+                    target=tgt,
+                    message=f"{bp.name}: array {tuple(bp.array_shape)} not "
+                            f"divisible by block {tuple(bp.block_shape)} "
+                            f"on dims {bad}",
+                    evidence={"block": list(bp.block_shape),
+                              "array": list(bp.array_shape), "dims": bad}))
+    return out
+
+
+def _prefetch_fills(kp: KernelPlan):
+    """Ref-array fill values exercising both ends of each prefetch range."""
+    if not kp.scalar_prefetch:
+        yield ()
+        return
+    for fill in ("zero", "max"):
+        yield tuple(np.full(sp.shape,
+                            0 if fill == "zero" else sp.max_value,
+                            dtype=sp.dtype)
+                    for sp in kp.scalar_prefetch)
+
+
+@register("pallas/index_map_bounds",
+          "Index maps stay in-bounds at every grid corner, including the "
+          "extremes of scalar-prefetched operands.", tags=("pallas",))
+def index_map_bounds(ctx: AnalysisContext) -> List[Finding]:
+    out = []
+    for kp in build_plans(ctx):
+        tgt = f"{kp.family}.{kp.entry}"
+        corners = itertools.product(*({0, g - 1} for g in kp.grid))
+        for corner in corners:
+            for refs in _prefetch_fills(kp):
+                for bp in kp.blocks:
+                    try:
+                        idx = bp.index_map(*corner, *refs)
+                    except Exception as e:  # map crashed: also a finding
+                        out.append(Finding(
+                            rule="pallas/index_map_bounds", severity="fail",
+                            target=tgt,
+                            message=f"{bp.name}: index_map raised at grid "
+                                    f"{corner}: {e!r}",
+                            evidence={"corner": list(corner)}))
+                        continue
+                    idx = tuple(int(i) for i in idx)
+                    if len(idx) != len(bp.block_shape):
+                        out.append(Finding(
+                            rule="pallas/index_map_bounds", severity="fail",
+                            target=tgt,
+                            message=f"{bp.name}: index_map arity "
+                                    f"{len(idx)} != block rank "
+                                    f"{len(bp.block_shape)}",
+                            evidence={"idx": list(idx)}))
+                        continue
+                    oob = [i for i, (ix, blk, arr) in enumerate(
+                        zip(idx, bp.block_shape, bp.array_shape))
+                        if ix < 0 or (ix + 1) * blk > arr]
+                    if oob:
+                        out.append(Finding(
+                            rule="pallas/index_map_bounds", severity="fail",
+                            target=tgt,
+                            message=f"{bp.name}: block index {idx} out of "
+                                    f"bounds at grid {corner} on dims {oob}",
+                            evidence={"corner": list(corner),
+                                      "idx": list(idx), "dims": oob,
+                                      "block": list(bp.block_shape),
+                                      "array": list(bp.array_shape)}))
+    return out
+
+
+@register("pallas/accum_dtype",
+          "Accumulator scratch buffers are fp32 (never the compute dtype).",
+          tags=("pallas",))
+def accum_dtype(ctx: AnalysisContext) -> List[Finding]:
+    out = []
+    for kp in build_plans(ctx):
+        for sp in kp.scratch:
+            if sp.accumulator and sp.dtype != "float32":
+                out.append(Finding(
+                    rule="pallas/accum_dtype", severity="fail",
+                    target=f"{kp.family}.{kp.entry}",
+                    message=f"accumulator scratch {sp.name!r} is "
+                            f"{sp.dtype} (must be float32)",
+                    evidence={"scratch": sp.name, "dtype": sp.dtype}))
+    return out
+
+
+@register("pallas/dispatch_symmetry",
+          "REPRO_FORCE_REF and non-TPU backends pin the reference path for "
+          "every kernel family; TPU without force takes Pallas.",
+          tags=("pallas",))
+def dispatch_symmetry(ctx: AnalysisContext) -> List[Finding]:
+    out = []
+    probes: Dict[str, tuple] = {
+        "forced ref on tpu": (dict(backend="tpu", force=True), False),
+        "pallas on tpu": (dict(backend="tpu", force=False), True),
+        "ref off tpu": (dict(backend="cpu", force=False), False),
+    }
+    for family in FAMILIES:
+        for label, (kw, want_pallas) in probes.items():
+            d = decide(family, **kw)
+            if d.use_pallas != want_pallas:
+                out.append(Finding(
+                    rule="pallas/dispatch_symmetry", severity="fail",
+                    target=family,
+                    message=f"{label}: decide() returned "
+                            f"use_pallas={d.use_pallas} ({d.reason})",
+                    evidence={"probe": label, "reason": d.reason}))
+    return out

@@ -1,0 +1,143 @@
+"""AST-level source lint for the hot-path modules — stdlib only.
+
+Bans the idioms that silently serialize a training/serving loop on the
+host, at the source level (the jaxpr trace lint can only see what got
+traced; this catches the call sites that never should exist):
+
+* ``.item()`` — per-element device sync
+* ``jax.device_get`` — explicit device-to-host copy
+* ``.block_until_ready()`` — host barrier
+* ``jax.random.PRNGKey(<constant>)`` — an ad-hoc fixed key minted at a
+  call site (keys must be threaded in or derived; a constant key silently
+  reuses randomness across calls)
+
+Sanctioned sites carry a line pragma::
+
+    values = jax.device_get(jnp.stack(pending))  # repro: allow-host-sync
+    key = jax.random.PRNGKey(0)                  # repro: allow-const-key
+
+``bench*.py`` files are excluded wholesale: a benchmark's entire job is to
+sync the device, and its fixed seeds are the reproducibility contract.
+
+This module must import without jax (CI's lint job has only ruff + stdlib):
+it registers its rules into the jax-free ``repro.analysis.core`` registry
+and doubles as a CLI — ``python -m repro.analysis.source [paths]`` — that
+exits 1 on any finding.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import Iterator, List, Sequence
+
+from repro.analysis.core import AnalysisContext, Finding, register
+
+HOT_PATH_DIRS = ("train", "serve", "dist", "kernels", "core", "models")
+PRAGMA = "# repro: allow-"
+HOST_SYNC_ATTRS = ("item", "device_get", "block_until_ready")
+
+
+def _repro_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def default_paths() -> List[str]:
+    root = _repro_root()
+    return [os.path.join(root, d) for d in HOT_PATH_DIRS]
+
+
+def _allows(line: str, check: str) -> bool:
+    i = line.find(PRAGMA)
+    return i >= 0 and line[i + len(PRAGMA):].startswith(check)
+
+
+def _check_call(node: ast.Call) -> Iterator[tuple]:
+    """Yield (check, message) for one call node."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        if fn.attr in HOST_SYNC_ATTRS:
+            yield ("host-sync", f".{fn.attr}() syncs the host")
+        if fn.attr == "PRNGKey" and node.args and \
+                isinstance(node.args[0], ast.Constant):
+            yield ("const-key",
+                   f"ad-hoc constant PRNGKey({node.args[0].value!r})")
+    elif isinstance(fn, ast.Name) and fn.id in HOST_SYNC_ATTRS:
+        yield ("host-sync", f"{fn.id}() syncs the host")
+
+
+def scan_file(path: str, rel: str = "") -> List[Finding]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="source/host_sync", severity="fail",
+                        target=rel or path,
+                        message=f"unparseable: {e.msg} (line {e.lineno})")]
+    lines = src.splitlines()
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for check, msg in _check_call(node):
+            line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+            if _allows(line, check):
+                continue
+            rule = "source/host_sync" if check == "host-sync" \
+                else "source/const_key"
+            out.append(Finding(
+                rule=rule, severity="fail",
+                target=f"{rel or path}:{node.lineno}", message=msg,
+                evidence={"line": line.strip()[:120]}))
+    return out
+
+
+def scan_paths(paths: Sequence[str]) -> List[Finding]:
+    root = os.path.dirname(_repro_root())        # .../src
+    out = []
+    for p in paths:
+        files = [p] if os.path.isfile(p) else sorted(
+            os.path.join(dp, f) for dp, _, fs in os.walk(p) for f in fs
+            if f.endswith(".py"))
+        for f in files:
+            if os.path.basename(f).startswith("bench"):
+                continue
+            rel = os.path.relpath(f, root) if f.startswith(root) else f
+            out.extend(scan_file(f, rel))
+    return out
+
+
+@register("source/host_sync",
+          "No .item() / device_get / block_until_ready in hot-path modules "
+          "outside pragma-allowed lines.", tags=("source",))
+def host_sync(ctx: AnalysisContext) -> List[Finding]:
+    return [f for f in scan_paths(default_paths())
+            if f.rule == "source/host_sync"]
+
+
+@register("source/const_key",
+          "No ad-hoc constant PRNGKey() minted in hot-path modules outside "
+          "pragma-allowed lines.", tags=("source",))
+def const_key(ctx: AnalysisContext) -> List[Finding]:
+    return [f for f in scan_paths(default_paths())
+            if f.rule == "source/const_key"]
+
+
+def main(argv: Sequence[str] = ()) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.source",
+        description="AST lint for hot-path modules (stdlib-only).")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to scan (default: the hot-path dirs)")
+    args = ap.parse_args(argv or None)
+    findings = scan_paths(args.paths or default_paths())
+    for f in findings:
+        print(f"{f.target}: [{f.rule}] {f.message}")
+    print(f"source lint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

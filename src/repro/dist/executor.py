@@ -191,7 +191,7 @@ class StageExecutor:
     def gather(self) -> list:
         """Per-stage params pulled to host (ONE blocking point, at the end —
         committed buffers on different devices must not feed a joint op)."""
-        return [jax.device_get(p) for p in self.params]
+        return [jax.device_get(p) for p in self.params]  # repro: allow-host-sync
 
     def finalize(self, trainer, state, phase_name: str = "parallel") -> None:
         """Hand results back to the TrainState: params re-hosted (so joins,

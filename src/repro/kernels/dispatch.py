@@ -1,27 +1,99 @@
 """Shared backend dispatch for the Pallas kernels.
 
-Every kernel family routes through these two predicates: Pallas on TPU,
-pure-jnp reference elsewhere, with ``REPRO_FORCE_REF=1`` pinning the
-reference even on TPU so bf16-in/fp32-accum numerics can be cross-checked
-against the same math on both paths (tests/test_precision.py).
+Every kernel family routes through ``decide()``: Pallas on TPU, pure-jnp
+reference elsewhere, with ``REPRO_FORCE_REF=1`` pinning the reference even
+on TPU so bf16-in/fp32-accum numerics can be cross-checked against the same
+math on both paths (tests/test_precision.py).
+
+Decisions are cached by (family, shape, dtype, backend, force) — the ops
+wrappers call in from inside jit traces, so the predicate chain must stay
+cheap — and a fallback to the reference path is logged ONCE per (family,
+reason) instead of per call.
 """
 from __future__ import annotations
 
+import functools
+import logging
 import os
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 
+log = logging.getLogger("repro.kernels")
+
+
+@dataclass(frozen=True)
+class Decision:
+    """One resolved dispatch: which path a kernel family takes and why."""
+    family: str
+    use_pallas: bool
+    reason: str
+    backend: str
+
 
 def on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover
-        return False
+    return _default_backend() == "tpu"
 
 
 def force_ref() -> bool:
     return os.environ.get("REPRO_FORCE_REF", "") == "1"
 
 
+def _default_backend() -> str:
+    try:
+        return jax.default_backend()
+    except Exception:  # pragma: no cover
+        return "cpu"
+
+
+@functools.lru_cache(maxsize=1024)
+def _decide(family: str, shape: Optional[Tuple[int, ...]],
+            dtype: Optional[str], backend: str, force: bool) -> Decision:
+    if force:
+        return Decision(family, False, "REPRO_FORCE_REF=1", backend)
+    if backend != "tpu":
+        return Decision(family, False,
+                        f"no Pallas lowering on backend={backend!r}", backend)
+    return Decision(family, True, "tpu", backend)
+
+
+_logged_fallbacks = set()
+
+
+def decide(family: str, shape=None, dtype=None, *, backend: Optional[str]
+           = None, force: Optional[bool] = None) -> Decision:
+    """Resolve (and cache) the dispatch for one kernel call site.
+
+    ``force`` / ``backend`` override the environment for introspection (the
+    ``repro.analysis`` dispatch-symmetry rule probes both paths without
+    flipping env vars); callers inside jit traces pass the traced operand's
+    ``shape`` / ``dtype`` so distinct workloads get distinct cache rows."""
+    if backend is None:
+        # on_tpu() is the patchable seam tests use to simulate a TPU host.
+        backend = "tpu" if on_tpu() else _default_backend()
+    force = force_ref() if force is None else force
+    d = _decide(family, tuple(shape) if shape is not None else None,
+                str(dtype) if dtype is not None else None, backend,
+                bool(force))
+    if not d.use_pallas:
+        key = (family, d.reason)
+        if key not in _logged_fallbacks:
+            _logged_fallbacks.add(key)
+            log.info("kernels.%s -> reference path (%s)", family, d.reason)
+    return d
+
+
 def use_pallas() -> bool:
-    return on_tpu() and not force_ref()
+    """Back-compat predicate (family-agnostic dispatch)."""
+    return decide("_any").use_pallas
+
+
+def cache_clear() -> None:
+    """Reset the decision cache + the log-once set (tests flip env vars)."""
+    _decide.cache_clear()
+    _logged_fallbacks.clear()
+
+
+def cache_info():
+    return _decide.cache_info()

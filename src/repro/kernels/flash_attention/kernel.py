@@ -23,11 +23,85 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.plan import (BlockPlan, KernelPlan, ScratchPlan,
+                                as_block_spec, as_scratch)
 
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
 NEG_INF = -1e30
+
+
+def plan(b, sq, sk, h, kv, d, *, bq=DEFAULT_BQ, bk=DEFAULT_BK,
+         dtype="float32") -> KernelPlan:
+    """Launch geometry for ``flash_attention_tpu`` over logical shapes
+    q:(b,sq,h,d), k/v:(b,sk,kv,d).  Arrays are transposed to head-major and
+    padded to block multiples before the call; the plan describes those
+    padded layouts."""
+    g = h // kv
+    bq_ = min(bq, sq)
+    bk_ = min(bk, sk)
+    sq_p = sq + (-sq) % bq_
+    sk_p = sk + (-sk) % bk_
+    nq = sq_p // bq_
+    nk = sk_p // bk_
+    kv_map = lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)  # noqa: E731
+    return KernelPlan(
+        family="flash_attention", entry="flash_attention",
+        grid=(b, h, nq, nk),
+        inputs=(
+            BlockPlan("q", (1, 1, bq_, d),
+                      lambda b_, h_, iq, ik: (b_, h_, iq, 0),
+                      (b, h, sq_p, d), dtype),
+            BlockPlan("k", (1, 1, bk_, d), kv_map, (b, kv, sk_p, d), dtype),
+            BlockPlan("v", (1, 1, bk_, d), kv_map, (b, kv, sk_p, d), dtype),
+        ),
+        outputs=(
+            BlockPlan("o", (1, 1, bq_, d),
+                      lambda b_, h_, iq, ik: (b_, h_, iq, 0),
+                      (b, h, sq_p, d), dtype),
+        ),
+        scratch=(
+            ScratchPlan("m", (bq_,), "float32", accumulator=True),
+            ScratchPlan("l", (bq_,), "float32", accumulator=True),
+            ScratchPlan("acc", (bq_, d), "float32", accumulator=True),
+        ),
+    )
+
+
+def decode_plan(b, lc, h, kv, d, *, bk=DEFAULT_BK,
+                dtype="float32") -> KernelPlan:
+    """Launch geometry for ``decode_attention_tpu``: q:(b,1,h,d) over a
+    (b,lc,kv,d) cache, with the per-request position vector in SMEM."""
+    g = h // kv
+    bk_ = min(bk, lc)
+    lc_p = lc + (-lc) % bk_
+    nk = lc_p // bk_
+    return KernelPlan(
+        family="flash_attention", entry="decode_attention",
+        grid=(b, kv, nk),
+        inputs=(
+            BlockPlan("pos", (1,), lambda b_, kv_, ik: (b_,), (b,),
+                      "int32", memory_space="smem"),
+            BlockPlan("q", (1, 1, g, d), lambda b_, kv_, ik: (b_, kv_, 0, 0),
+                      (b, kv, g, d), dtype),
+            BlockPlan("k", (1, 1, bk_, d),
+                      lambda b_, kv_, ik: (b_, kv_, ik, 0),
+                      (b, kv, lc_p, d), dtype),
+            BlockPlan("v", (1, 1, bk_, d),
+                      lambda b_, kv_, ik: (b_, kv_, ik, 0),
+                      (b, kv, lc_p, d), dtype),
+        ),
+        outputs=(
+            BlockPlan("o", (1, 1, g, d), lambda b_, kv_, ik: (b_, kv_, 0, 0),
+                      (b, kv, g, d), dtype),
+        ),
+        scratch=(
+            ScratchPlan("m", (g,), "float32", accumulator=True),
+            ScratchPlan("l", (g,), "float32", accumulator=True),
+            ScratchPlan("acc", (g, d), "float32", accumulator=True),
+        ),
+    )
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -84,42 +158,30 @@ def flash_attention_tpu(q, k, v, *, causal=True, window=0, bq=DEFAULT_BQ,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
+    kp = plan(b, sq, sk, h, kv, d, bq=bq, bk=bk, dtype=str(q.dtype))
+    bq_ = kp.inputs[0].block_shape[2]
+    bk_ = kp.inputs[1].block_shape[2]
+    pad_q = kp.inputs[0].array_shape[2] - sq
+    pad_k = kp.inputs[1].array_shape[2] - sk
+
     qt = q.transpose(0, 2, 1, 3)     # (B, H, Sq, D)
     kt = k.transpose(0, 2, 1, 3)     # (B, KV, Sk, D)
     vt = v.transpose(0, 2, 1, 3)
-    bq_ = min(bq, sq)
-    bk_ = min(bk, sk)
-    pad_q = (-sq) % bq_
-    pad_k = (-sk) % bk_
     if pad_q:
         qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
     if pad_k:
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-    nq = qt.shape[2] // bq_
-    nk = kt.shape[2] // bk_
 
     kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
                                window=window, bq=bq_, bk=bk_, sk=sk)
     out = pl.pallas_call(
         kernel,
-        grid=(b, h, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq_, d),
-                         lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
-            pl.BlockSpec((1, 1, bk_, d),
-                         lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
-            pl.BlockSpec((1, 1, bk_, d),
-                         lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq_, d),
-                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, nq * bq_, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq_,), jnp.float32),       # m
-            pltpu.VMEM((bq_,), jnp.float32),       # l
-            pltpu.VMEM((bq_, d), jnp.float32),     # acc
-        ],
+        grid=kp.grid,
+        in_specs=[as_block_spec(bp) for bp in kp.inputs],
+        out_specs=as_block_spec(kp.outputs[0]),
+        out_shape=jax.ShapeDtypeStruct(kp.outputs[0].array_shape, q.dtype),
+        scratch_shapes=[as_scratch(sp) for sp in kp.scratch],
         interpret=interpret,
     )(qt, kt, vt)
     out = out[:, :, :sq]
@@ -181,36 +243,26 @@ def decode_attention_tpu(q, k_cache, v_cache, pos, *, window=0,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
+    kp = decode_plan(b, lc, h, kv, d, bk=bk, dtype=str(q.dtype))
+    bk_ = kp.inputs[2].block_shape[2]
+    pad = kp.inputs[2].array_shape[2] - lc
+
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     qt = q[:, 0].reshape(b, kv, g, d)                    # (B, KV, G, D)
     kt = k_cache.transpose(0, 2, 1, 3)                   # (B, KV, Lc, D)
     vt = v_cache.transpose(0, 2, 1, 3)
-    bk_ = min(bk, lc)
-    pad = (-lc) % bk_
     if pad:
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    nk = kt.shape[2] // bk_
 
     kernel = functools.partial(_decode_kernel, scale=scale, bk=bk_, lc=lc)
     out = pl.pallas_call(
         kernel,
-        grid=(b, kv, nk),
-        in_specs=[
-            pl.BlockSpec((1,), lambda b_, kv_, ik: (b_,),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, g, d), lambda b_, kv_, ik: (b_, kv_, 0, 0)),
-            pl.BlockSpec((1, 1, bk_, d), lambda b_, kv_, ik: (b_, kv_, ik, 0)),
-            pl.BlockSpec((1, 1, bk_, d), lambda b_, kv_, ik: (b_, kv_, ik, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda b_, kv_, ik: (b_, kv_, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((g,), jnp.float32),       # m
-            pltpu.VMEM((g,), jnp.float32),       # l
-            pltpu.VMEM((g, d), jnp.float32),     # acc
-        ],
+        grid=kp.grid,
+        in_specs=[as_block_spec(bp) for bp in kp.inputs],
+        out_specs=as_block_spec(kp.outputs[0]),
+        out_shape=jax.ShapeDtypeStruct(kp.outputs[0].array_shape, q.dtype),
+        scratch_shapes=[as_scratch(sp) for sp in kp.scratch],
         interpret=interpret,
     )(pos_b, qt, kt, vt)
     return out.reshape(b, 1, h, d)

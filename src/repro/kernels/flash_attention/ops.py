@@ -8,7 +8,7 @@ the serving engine is testable against both.
 """
 from __future__ import annotations
 
-from repro.kernels.dispatch import use_pallas
+from repro.kernels.dispatch import decide
 
 from . import ref
 
@@ -19,7 +19,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, chunk=512):
     Inputs may be any float dtype (bf16/fp16 under a reduced-precision
     policy); both backends accumulate scores and the softmax in fp32 and
     return the input dtype."""
-    if use_pallas():
+    if decide("flash_attention", q.shape, q.dtype).use_pallas:
         from .kernel import flash_attention_tpu
         return flash_attention_tpu(q, k, v, causal=causal, window=window)
     return ref.chunked_attention(q, k, v, causal=causal, window=window, chunk=chunk)
@@ -27,7 +27,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, chunk=512):
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=0):
     """Single-token decode over a KV cache (ring-buffered if window>0)."""
-    if use_pallas():
+    if decide("flash_attention", k_cache.shape, q.dtype).use_pallas:
         from .kernel import decode_attention_tpu
         return decode_attention_tpu(q, k_cache, v_cache, pos, window=window)
     return ref.decode_attention(q, k_cache, v_cache, pos, window=window)

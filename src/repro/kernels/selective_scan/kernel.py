@@ -16,10 +16,50 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.plan import (BlockPlan, KernelPlan, ScratchPlan,
+                                as_block_spec, as_scratch)
 
 DEFAULT_CHUNK = 128
 DEFAULT_BD = 256
+
+
+def plan(ba, s, di, n, *, chunk=DEFAULT_CHUNK, bd=DEFAULT_BD,
+         dtype="float32") -> KernelPlan:
+    """Launch geometry for ``selective_scan_tpu``: u/dt:(ba,s,di), A:(di,n),
+    B/C:(ba,s,n), D:(di,) — the time-chunk axis minor-most so the (BD, N)
+    recurrent state stays VMEM-resident across chunks."""
+    ch = min(chunk, s)
+    bd_ = min(bd, di)
+    s_p = s + (-s) % ch
+    di_p = di + (-di) % bd_
+    nc = s_p // ch
+    nd = di_p // bd_
+    return KernelPlan(
+        family="selective_scan", entry="selective_scan",
+        grid=(ba, nd, nc),
+        inputs=(
+            BlockPlan("u", (1, ch, bd_), lambda b, idd, ic: (b, ic, idd),
+                      (ba, s_p, di_p), dtype),
+            BlockPlan("dt", (1, ch, bd_), lambda b, idd, ic: (b, ic, idd),
+                      (ba, s_p, di_p), dtype),
+            BlockPlan("A", (bd_, n), lambda b, idd, ic: (idd, 0),
+                      (di_p, n), "float32"),
+            BlockPlan("B", (1, ch, n), lambda b, idd, ic: (b, ic, 0),
+                      (ba, s_p, n), dtype),
+            BlockPlan("C", (1, ch, n), lambda b, idd, ic: (b, ic, 0),
+                      (ba, s_p, n), dtype),
+            BlockPlan("D", (bd_,), lambda b, idd, ic: (idd,),
+                      (di_p,), "float32"),
+        ),
+        outputs=(
+            BlockPlan("y", (1, ch, bd_), lambda b, idd, ic: (b, ic, idd),
+                      (ba, s_p, di_p), dtype),
+            BlockPlan("h_last", (1, bd_, n), lambda b, idd, ic: (b, idd, 0),
+                      (ba, di_p, n), "float32"),
+        ),
+        scratch=(ScratchPlan("h", (bd_, n), "float32", accumulator=True),),
+    )
 
 
 def _scan_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
@@ -71,10 +111,10 @@ def selective_scan_tpu(u, dt, A, B, C, D, *, chunk=DEFAULT_CHUNK,
     n = A.shape[1]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    ch = min(chunk, s)
-    bd_ = min(bd, di)
-    pad_s = (-s) % ch
-    pad_d = (-di) % bd_
+    kp = plan(ba, s, di, n, chunk=chunk, bd=bd, dtype=str(u.dtype))
+    ch = kp.inputs[0].block_shape[1]
+    pad_s = kp.inputs[0].array_shape[1] - s
+    pad_d = kp.inputs[0].array_shape[2] - di
 
     def padsd(x):  # pad time and channel dims
         return jnp.pad(x, ((0, 0), (0, pad_s), (0, pad_d)))
@@ -85,30 +125,18 @@ def selective_scan_tpu(u, dt, A, B, C, D, *, chunk=DEFAULT_CHUNK,
     cp = jnp.pad(C, ((0, 0), (0, pad_s), (0, 0))) if pad_s else C
     ap = jnp.pad(A, ((0, pad_d), (0, 0))) if pad_d else A
     dp = jnp.pad(D, (0, pad_d)) if pad_d else D
-    nc = up.shape[1] // ch
-    nd = up.shape[2] // bd_
 
     kernel = functools.partial(_scan_kernel, chunk=ch, s_total=s)
     y, h_last = pl.pallas_call(
         kernel,
-        grid=(ba, nd, nc),
-        in_specs=[
-            pl.BlockSpec((1, ch, bd_), lambda b, idd, ic: (b, ic, idd)),
-            pl.BlockSpec((1, ch, bd_), lambda b, idd, ic: (b, ic, idd)),
-            pl.BlockSpec((bd_, n), lambda b, idd, ic: (idd, 0)),
-            pl.BlockSpec((1, ch, n), lambda b, idd, ic: (b, ic, 0)),
-            pl.BlockSpec((1, ch, n), lambda b, idd, ic: (b, ic, 0)),
-            pl.BlockSpec((bd_,), lambda b, idd, ic: (idd,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, ch, bd_), lambda b, idd, ic: (b, ic, idd)),
-            pl.BlockSpec((1, bd_, n), lambda b, idd, ic: (b, idd, 0)),
-        ],
+        grid=kp.grid,
+        in_specs=[as_block_spec(bpn) for bpn in kp.inputs],
+        out_specs=[as_block_spec(bpn) for bpn in kp.outputs],
         out_shape=[
-            jax.ShapeDtypeStruct(up.shape, u.dtype),
-            jax.ShapeDtypeStruct((ba, up.shape[2], n), jnp.float32),
+            jax.ShapeDtypeStruct(kp.outputs[0].array_shape, u.dtype),
+            jax.ShapeDtypeStruct(kp.outputs[1].array_shape, jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((bd_, n), jnp.float32)],
+        scratch_shapes=[as_scratch(sp) for sp in kp.scratch],
         interpret=interpret,
     )(up, dtp, ap, bp, cp, dp)
     return y[:, :s, :di], h_last[:, :di]

@@ -4,13 +4,13 @@ kernels — both backends take compute-dtype inputs and keep the recurrent
 state in fp32)."""
 from __future__ import annotations
 
-from repro.kernels.dispatch import use_pallas
+from repro.kernels.dispatch import decide
 
 from . import ref
 
 
 def selective_scan(u, dt, A, B, C, D, *, chunk=128, h0=None):
-    if use_pallas():
+    if decide("selective_scan", u.shape, u.dtype).use_pallas:
         from .kernel import selective_scan_tpu
         return selective_scan_tpu(u, dt, A, B, C, D, chunk=chunk, h0=h0)
     return ref.selective_scan(u, dt, A, B, C, D, chunk=chunk, h0=h0)

@@ -19,8 +19,43 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.plan import (BlockPlan, KernelPlan, ScalarPrefetchPlan,
+                                as_block_spec)
+
 DEFAULT_BT = 128
 DEFAULT_BD = 512
+
+
+def plan(t, d, m, *, bt=DEFAULT_BT, bd=DEFAULT_BD,
+         dtype="float32") -> KernelPlan:
+    """Launch geometry for ``sil_mse_fwd_tpu``: act:(t,d), sil:(d,m),
+    labels:(t,) int in [0, m).  The scalar-prefetched labels drive the SIL
+    column index map — the gathered target never exists in HBM."""
+    bt_ = min(bt, t)
+    bd_ = min(bd, d)
+    t_p = t + (-t) % bt_
+    d_p = d + (-d) % bd_
+    nt = t_p // bt_
+    nd = d_p // bd_
+    return KernelPlan(
+        family="sil_mse", entry="sil_mse",
+        grid=(nt, bt_, nd),
+        scalar_prefetch=(
+            ScalarPrefetchPlan("labels", (t_p,), "int32", max_value=m - 1),
+        ),
+        inputs=(
+            BlockPlan("act", (1, bd_), lambda it, i, idd, lab_ref:
+                      (it * bt_ + i, idd), (t_p, d_p), dtype),
+            BlockPlan("sil", (bd_, 1), lambda it, i, idd, lab_ref:
+                      (idd, lab_ref[it * bt_ + i]), (d_p, m), "float32"),
+        ),
+        outputs=(
+            BlockPlan("partial_loss", (1,), lambda it, i, idd, lab_ref:
+                      (it,), (nt,), "float32"),
+            BlockPlan("grad", (1, bd_), lambda it, i, idd, lab_ref:
+                      (it * bt_ + i, idd), (t_p, d_p), dtype),
+        ),
+    )
 
 
 def _sil_kernel(lab_ref, act_ref, sil_ref, loss_ref, grad_ref, *, bt, bd,
@@ -47,38 +82,28 @@ def sil_mse_fwd_tpu(act, sil, labels, *, bt=DEFAULT_BT, bd=DEFAULT_BD,
                     interpret=None):
     """act: (T, d); sil: (d, M); labels: (T,) -> (mean loss, dloss/dact)."""
     t, d = act.shape
+    m = sil.shape[1]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    bt_ = min(bt, t)
-    bd_ = min(bd, d)
-    pad_t = (-t) % bt_
-    pad_d = (-d) % bd_
+    kp = plan(t, d, m, bt=bt, bd=bd, dtype=str(act.dtype))
+    bt_ = kp.grid[1]
+    bd_ = kp.inputs[0].block_shape[1]
+    pad_t = kp.inputs[0].array_shape[0] - t
+    pad_d = kp.inputs[0].array_shape[1] - d
     a = jnp.pad(act, ((0, pad_t), (0, pad_d))) if (pad_t or pad_d) else act
     s = jnp.pad(sil, ((0, pad_d), (0, 0))) if pad_d else sil
     lab = jnp.pad(labels, (0, pad_t)).astype(jnp.int32) if pad_t \
         else labels.astype(jnp.int32)
-    nt = a.shape[0] // bt_
-    nd = a.shape[1] // bd_
+    nt = kp.grid[0]
     scale = 2.0 / (t * d)
 
     kernel = functools.partial(_sil_kernel, bt=bt_, bd=bd_, t_total=t,
                                scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(nt, bt_, nd),
-        in_specs=[
-            # one activation row per step
-            pl.BlockSpec((1, bd_), lambda it, i, idd, lab_ref:
-                         (it * bt_ + i, idd)),
-            # the label-selected SIL column block
-            pl.BlockSpec((bd_, 1), lambda it, i, idd, lab_ref:
-                         (idd, lab_ref[it * bt_ + i])),
-        ],
-        out_specs=[
-            pl.BlockSpec((1,), lambda it, i, idd, lab_ref: (it,)),
-            pl.BlockSpec((1, bd_), lambda it, i, idd, lab_ref:
-                         (it * bt_ + i, idd)),
-        ],
+        num_scalar_prefetch=len(kp.scalar_prefetch),
+        grid=kp.grid,
+        in_specs=[as_block_spec(bp) for bp in kp.inputs],
+        out_specs=[as_block_spec(bp) for bp in kp.outputs],
     )
     partial_loss, grad = pl.pallas_call(
         kernel,

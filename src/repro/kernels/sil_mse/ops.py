@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dispatch import use_pallas
+from repro.kernels.dispatch import decide
 
 from . import ref
 
@@ -19,7 +19,7 @@ def sil_mse(act, sil, labels):
 
 
 def _fwd_impl(act, sil, labels):
-    if use_pallas():
+    if decide("sil_mse", act.shape, act.dtype).use_pallas:
         from .kernel import sil_mse_tpu
         return sil_mse_tpu(act, sil, labels)
     return ref.sil_mse(act, sil, labels)

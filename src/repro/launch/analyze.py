@@ -1,0 +1,89 @@
+"""CLI: run the static analyzer over hot-path entry points + kernel plans.
+
+    python -m repro.launch.analyze --arch paper_mlp --arch qwen2_1_5b
+
+Traces the registered entry points to jaxprs (never compiles or executes a
+step), checks them against the trace rules, validates every Pallas
+KernelPlan, runs the AST source lint, and writes the schema-versioned
+report to results/ANALYSIS_6.json.  Exit 1 iff any fail-severity finding
+(or a crashed rule) — warn/info never gate.
+
+NOTE: do not import repro.launch.dryrun here — its module top installs a
+512-host-device XLA_FLAGS world that would poison this process.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+# importing the rule modules populates the registry
+import repro.analysis.rules_pallas   # noqa: F401
+import repro.analysis.rules_trace    # noqa: F401
+import repro.analysis.source         # noqa: F401
+from repro.analysis import AnalysisContext, all_rules, get_rule, run_rule
+from repro.analysis.report import build_report, write_report
+
+DEFAULT_ARCHS = ("paper_mlp", "qwen2-1.5b")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.analyze",
+        description="Static hot-path lint + Pallas kernel checker.")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="config name to analyze (repeatable; default: "
+                         f"{', '.join(DEFAULT_ARCHS)})")
+    ap.add_argument("--rules", action="append", default=None,
+                    help="run only these rules (repeatable)")
+    ap.add_argument("--precision", default="bf16",
+                    help="policy preset the hot paths are checked under")
+    ap.add_argument("--json", default="results/ANALYSIS_6.json",
+                    help="report path ('' disables)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered rules and exit")
+    args = ap.parse_args(argv)
+
+    rules = all_rules()
+    if args.list:
+        for r in rules:
+            print(f"{r.name:28s} [{','.join(r.tags)}] {r.doc}")
+        return 0
+    if args.rules:
+        rules = [get_rule(n) for n in args.rules]
+
+    archs = list(args.arch or DEFAULT_ARCHS)
+    results_by_arch = {}
+    gate = False
+    for arch in archs:
+        ctx = AnalysisContext(arch=arch, precision=args.precision)
+        results = [run_rule(r, ctx) for r in rules]
+        results_by_arch[arch] = results
+        for res in results:
+            mark = "PASS" if res.ok else "FAIL"
+            if res.ok and res.n_warn:
+                mark = "WARN"
+            print(f"[{mark}] {arch:14s} {res.name:26s} "
+                  f"({res.seconds:.2f}s, {res.n_fail} fail / "
+                  f"{res.n_warn} warn)")
+            for f in res.findings:
+                if f.severity != "info":
+                    print(f"    {f.severity.upper()}: {f.target}: "
+                          f"{f.message}")
+            if res.error:
+                gate = True
+                print("    RULE ERROR:\n      "
+                      + res.error.strip().replace("\n", "\n      "))
+            gate = gate or not res.ok
+
+    report = build_report(results_by_arch)
+    if args.json:
+        write_report(report, args.json)
+        print(f"report: {args.json} (schema {report['schema']})")
+    n = report["n_fail_findings"]
+    print(f"analysis: {'FAIL' if gate else 'OK'} "
+          f"({n} fail finding(s), {report['n_warn_findings']} warn)")
+    return 1 if gate else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

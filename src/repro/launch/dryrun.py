@@ -24,7 +24,6 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, INPUT_SHAPES, get
@@ -35,7 +34,8 @@ from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
 from repro.launch.sharding import Policy
 from repro.launch.hlo_analysis import (analytic_flops_per_chip,
                                         analytic_hbm_bytes_per_chip,
-                                        collective_stats_loop_aware)
+                                        collective_stats_loop_aware,
+                                        tree_bytes_per_chip)
 from repro.launch.steps import (build_decode_step, build_pnn_stage_step,
                                 build_prefill_step, build_train_step,
                                 pick_accum, pick_optimizer_name, _shard_x_fn)
@@ -89,23 +89,9 @@ def analyze(compiled, lowered, cfg, shape, n_chips, *,
 
 
 def arg_bytes_per_chip(tree, shardings, mesh) -> int:
-    """Analytic per-chip bytes of a sharded input tree."""
-    total = 0
-    flat = jax.tree_util.tree_leaves(tree)
-    shards = jax.tree_util.tree_leaves(
-        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
-    for leaf, sh in zip(flat, shards):
-        n = int(np.prod(leaf.shape)) if leaf.shape else 1
-        den = 1
-        spec = sh.spec
-        for i, ent in enumerate(spec):
-            if ent is None:
-                continue
-            axes = ent if isinstance(ent, tuple) else (ent,)
-            for ax in axes:
-                den *= mesh.shape[ax]
-        total += (n // max(den, 1)) * jnp.dtype(leaf.dtype).itemsize
-    return total
+    """Analytic per-chip bytes of a sharded input tree (delegates to the
+    public ``hlo_analysis.tree_bytes_per_chip`` helper)."""
+    return tree_bytes_per_chip(tree, shardings, mesh)
 
 
 def model_flops(cfg, shape) -> float:

@@ -18,6 +18,9 @@ from __future__ import annotations
 import re
 from typing import Dict, Optional
 
+import jax
+import numpy as np
+
 from repro.configs.base import InputShape, ModelConfig
 from repro.precision import dtype_itemsize
 
@@ -145,6 +148,47 @@ def collective_stats_loop_aware(hlo: str) -> Dict:
     out["total_bytes"] = sum(v["bytes"] for v in stats.values())
     out["total_count"] = sum(v["count"] for v in stats.values())
     return out
+
+
+# --------------------------------------------------------------------------
+# pytree byte accounting (shared by dryrun and repro.analysis)
+# --------------------------------------------------------------------------
+
+def dtype_byte_breakdown(tree, shardings=None, mesh=None) -> Dict[str, int]:
+    """Per-dtype byte totals of a pytree of arrays / ShapeDtypeStructs.
+
+    With ``shardings`` (a matching tree of NamedShardings) and ``mesh``,
+    each leaf is divided by the product of its sharded mesh-axis sizes —
+    i.e. per-chip bytes, the number the roofline tables and the donation
+    evidence both want.  Without them, global bytes."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if shardings is not None:
+        from jax.sharding import NamedSharding
+        shards = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+    else:
+        shards = [None] * len(leaves)
+    out: Dict[str, int] = {}
+    for leaf, sh in zip(leaves, shards):
+        shape = getattr(leaf, "shape", ())
+        n = int(np.prod(shape)) if shape else 1
+        den = 1
+        if sh is not None:
+            for ent in sh.spec:
+                if ent is None:
+                    continue
+                axes = ent if isinstance(ent, tuple) else (ent,)
+                for ax in axes:
+                    den *= mesh.shape[ax]
+        dt = str(getattr(leaf, "dtype", "float32"))
+        out[dt] = out.get(dt, 0) + (n // max(den, 1)) * dtype_itemsize(dt)
+    return out
+
+
+def tree_bytes_per_chip(tree, shardings=None, mesh=None) -> int:
+    """Total (per-chip, when sharded) bytes of a pytree — the sum of
+    ``dtype_byte_breakdown``."""
+    return sum(dtype_byte_breakdown(tree, shardings, mesh).values())
 
 
 # --------------------------------------------------------------------------

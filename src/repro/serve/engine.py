@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import runtime
 from repro.models import model as M
 from repro.serve import sampling, staged
 from repro.serve.api import Completion, Request
@@ -88,8 +89,9 @@ class Engine:
         self._pool: Optional[CachePool] = None      # grow-only, one per engine
         # donate the cache/state buffers into the jitted steps (in-place
         # updates; halves peak cache memory) — CPU can't donate and would
-        # just warn per call
-        self._donate = jax.default_backend() != "cpu"
+        # just warn per call; repro.runtime owns the decision so trace-only
+        # introspection (REPRO_ASSUME_DONATION=1) sees the real masks
+        self._donate = runtime.donation_enabled()
         self.scheduler: Optional[Scheduler] = None  # last generate()'s
 
     # -- forward fns (plain vs staged) --------------------------------------

@@ -33,7 +33,7 @@ def stage_params_from_checkpoints(cfg, plan, ckpt_root, *, step=None,
     from repro.dist import lifecycle
 
     def all_likes():
-        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))  # repro: allow-const-key
         return [partition.slice_stage_params(cfg, plan, params, k)
                 for k in range(plan.n_stages)]
     likes = jax.eval_shape(all_likes)   # ONE abstract trace for all stages

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import precision as precision_lib
+from repro import runtime
 from repro.core import losses, partition, sil as sil_lib
 from repro.models import mlp as MLP
 from repro.models import model as M
@@ -37,8 +38,10 @@ from repro.train.spec import StageSpec, TrainSpec
 
 def donate_argnums(*nums) -> Tuple[int, ...]:
     """Buffer donation is unimplemented on CPU (JAX emits a warning and
-    ignores it); only request it where it exists."""
-    return nums if jax.default_backend() in ("gpu", "tpu") else ()
+    ignores it); only request it where it exists.  ``repro.runtime`` owns
+    the decision (REPRO_ASSUME_DONATION=1 forces the request on for
+    trace-only introspection such as ``repro.analysis``)."""
+    return runtime.donate_argnums(*nums)
 
 
 def _copy_tree(tree):

@@ -57,7 +57,8 @@ def _resolve_placement(plan, devices, trainer, state):
 def _rehost(tree):
     """Pull a (possibly device-committed) tree back to uncommitted default-
     device arrays so later phases can freely mix it with other stages."""
-    return jax.tree_util.tree_map(jnp.asarray, jax.device_get(tree))
+    return jax.tree_util.tree_map(
+        jnp.asarray, jax.device_get(tree))  # repro: allow-host-sync
 
 
 @dataclass
@@ -226,7 +227,8 @@ class BoundaryMaterializePhase(PhaseBase):
                           be.boundary_dtype())
             for i in range(nb):
                 cache.append(fwd(frozen, bx[i]))
-            labels = np.asarray(jax.device_get(by)).reshape(-1)
+            labels = np.asarray(
+                jax.device_get(by)).reshape(-1)  # repro: allow-host-sync
             state.boundary = {"h": cache, "labels": labels}
         else:
             if be.cfg.enc_dec:

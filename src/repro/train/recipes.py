@@ -110,7 +110,7 @@ def run_mlp_fig3(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
     spec = _with_eval(spec, eval_every)
     backend = MLPBackend(cfg, data, spec)
     kp, ks = jax.random.split(
-        jax.random.PRNGKey(0) if key is None else key)
+        jax.random.PRNGKey(0) if key is None else key)  # repro: allow-const-key
     params = MLP.init_params(cfg, kp)
     sil = sil_lib.make_sil(ks, backend.boundary_width(0), cfg.n_classes,
                            spec.kappa)

@@ -148,11 +148,12 @@ class Trainer:
                 if isinstance(leaf, jax.Array) else None
             groups.setdefault(dev, []).append(idx)
         if len(groups) == 1:
-            values = jax.device_get(jnp.stack(pending))
+            values = jax.device_get(jnp.stack(pending))  # repro: allow-host-sync
         else:
             values = [None] * len(pending)
             for idxs in groups.values():
-                got = jax.device_get(jnp.stack([pending[i] for i in idxs]))
+                got = jax.device_get(  # repro: allow-host-sync
+                    jnp.stack([pending[i] for i in idxs]))
                 for j, i in enumerate(idxs):
                     values[i] = got[j]
         stages = stage if isinstance(stage, list) else [stage] * len(pending)

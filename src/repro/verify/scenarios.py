@@ -57,11 +57,13 @@ def tiny_mlp(n_stages: int = 3, epochs: Sequence[int] = (2, 2, 2), *,
 def tiny_lm(arch: str = "qwen2-1.5b", *, steps: int = 3, n_stages: int = 2,
             accum: int = 1, batch: int = 2, seq: int = 32,
             lr: float = 1e-3, kappa: float = 1.0, optimizer: str = "adamw",
-            param_seed: int = 0):
+            precision=None, param_seed: int = 0):
     """(cfg, plan, batch_fn, spec, params) on the arch's smoke config.
 
     ``batch_fn`` is a PURE function of the step index (the repro.dist
-    replay contract), keyed exactly as the historical test_dist setup."""
+    replay contract), keyed exactly as the historical test_dist setup.
+    ``precision`` (preset name / PrecisionPolicy / None) flows into the
+    TrainSpec — LMBackend re-dtypes the stage forwards from it."""
     from repro.core import partition
     cfg = get(arch, smoke=True)
     plan = partition.make_plan(cfg, n_stages)
@@ -71,7 +73,7 @@ def tiny_lm(arch: str = "qwen2-1.5b", *, steps: int = 3, n_stages: int = 2,
         toks = jax.random.randint(k, (batch, seq), 0, cfg.vocab_size)
         return {"tokens": toks, "labels": toks}
 
-    spec = TrainSpec(n_stages=n_stages, kappa=kappa,
+    spec = TrainSpec(n_stages=n_stages, kappa=kappa, precision=precision,
                      stages=tuple(StageSpec(steps=steps, lr=lr,
                                             optimizer=optimizer, accum=accum)
                                   for _ in range(n_stages)))

@@ -1,0 +1,31 @@
+"""Deliberately-bad hot-path module: every banned idiom the AST source
+lint must flag, plus pragma'd lines it must NOT flag.  Never imported —
+only parsed by tests/test_analysis.py."""
+import jax
+import jax.numpy as jnp
+
+
+def bad_loop(xs):
+    total = 0.0
+    for x in xs:
+        total += x.sum().item()               # host sync per element
+    return total
+
+
+def bad_fetch(tree):
+    return jax.device_get(tree)               # explicit D2H in a hot path
+
+
+def bad_barrier(y):
+    jax.block_until_ready(y)                  # host barrier
+    return y
+
+
+def bad_key():
+    return jax.random.PRNGKey(0)              # ad-hoc constant key
+
+
+def sanctioned(tree, y):
+    host = jax.device_get(tree)  # repro: allow-host-sync
+    key = jax.random.PRNGKey(0)  # repro: allow-const-key
+    return host, key, jnp.asarray(y)

@@ -1,0 +1,69 @@
+"""kernels.dispatch: decision caching, env force-flip symmetry, log-once."""
+import logging
+
+import pytest
+
+from repro.kernels import FAMILIES
+from repro.kernels import dispatch
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    dispatch.cache_clear()
+    yield
+    dispatch.cache_clear()
+
+
+def test_decisions_are_cached():
+    d1 = dispatch.decide("flash_attention", (2, 32, 4, 64), "float32",
+                         backend="tpu", force=False)
+    before = dispatch.cache_info().hits
+    d2 = dispatch.decide("flash_attention", (2, 32, 4, 64), "float32",
+                         backend="tpu", force=False)
+    assert d2 is d1                      # same frozen Decision instance
+    assert dispatch.cache_info().hits == before + 1
+    # a different shape is a different cache row, not a hit
+    dispatch.decide("flash_attention", (2, 64, 4, 64), "float32",
+                    backend="tpu", force=False)
+    assert dispatch.cache_info().currsize >= 2
+
+
+def test_force_ref_flips_every_family(monkeypatch):
+    """REPRO_FORCE_REF=1 pins the reference path for EVERY kernel family,
+    even when the backend reports TPU; unset, TPU dispatches Pallas."""
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    dispatch.cache_clear()
+    for family in FAMILIES:
+        d = dispatch.decide(family, backend="tpu")
+        assert not d.use_pallas, family
+        assert d.reason == "REPRO_FORCE_REF=1"
+    monkeypatch.delenv("REPRO_FORCE_REF")
+    dispatch.cache_clear()
+    for family in FAMILIES:
+        assert dispatch.decide(family, backend="tpu").use_pallas, family
+        assert not dispatch.decide(family, backend="cpu").use_pallas, family
+
+
+def test_fallback_logged_once(caplog):
+    with caplog.at_level(logging.INFO, logger="repro.kernels"):
+        for _ in range(5):
+            dispatch.decide("sil_mse", (64, 16), "float32", backend="cpu",
+                            force=False)
+        dispatch.decide("sil_mse", (128, 16), "float32", backend="cpu",
+                        force=False)   # same family+reason: still no new log
+    msgs = [r.getMessage() for r in caplog.records]
+    assert msgs.count("kernels.sil_mse -> reference path "
+                      "(no Pallas lowering on backend='cpu')") == 1
+
+
+def test_ops_route_through_decide(monkeypatch):
+    """The back-compat use_pallas() predicate and the family decide() agree
+    with the patchable on_tpu() seam."""
+    monkeypatch.setattr(dispatch, "on_tpu", lambda: True)
+    dispatch.cache_clear()
+    assert dispatch.use_pallas()
+    assert dispatch.decide("selective_scan", (1, 32, 64), "float32").use_pallas
+    monkeypatch.setattr(dispatch, "on_tpu", lambda: False)
+    dispatch.cache_clear()
+    if dispatch._default_backend() not in ("tpu",):
+        assert not dispatch.use_pallas()
