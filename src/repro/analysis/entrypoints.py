@@ -77,6 +77,16 @@ def _lm_train_targets(ctx: AnalysisContext) -> List[TraceTarget]:
     st1 = opt.init(be.trainable(sps[1]))
     # n_stages=2 -> stage 1 is the last stage: CE head, sil_target=None
     step1 = be.build_parallel_stage_step(1, opt, sils[0], None)
+    # the searched-cut variant: the same step builder over a repro.plan
+    # auto partition — the lint rules must hold for searched bounds too
+    # (the cut changes which groups each stage's step closes over)
+    from repro.core import partition
+    aplan = partition.make_plan(cfg, 2, strategy="auto")
+    abe = LMBackend(cfg, aplan, batch_fn, spec)
+    asps = abe.split(params)
+    asils = abe.make_sils(jax.random.PRNGKey(1), spec.kappa)
+    ast = opt.init(abe.trainable(asps[1]))
+    astep = abe.build_parallel_stage_step(1, opt, asils[0], None)
     return [
         TraceTarget(name="train/lm_stage_step", fn=step0,
                     args=(sps[0], st0, batch, batch["labels"]),
@@ -86,6 +96,10 @@ def _lm_train_targets(ctx: AnalysisContext) -> List[TraceTarget]:
                     args=(sps[1], st1, batch["labels"]),
                     donate=(0, 1), policy=ctx.precision,
                     state_map=((0, 0), (1, 1)), tags=("train", "lm")),
+        TraceTarget(name="train/lm_auto_parallel_stage_step", fn=astep,
+                    args=(asps[1], ast, batch["labels"]),
+                    donate=(0, 1), policy=ctx.precision,
+                    state_map=((0, 0), (1, 1)), tags=("train", "lm", "plan")),
     ]
 
 

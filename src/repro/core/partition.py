@@ -30,10 +30,24 @@ class PartitionPlan:
         return self.n_stages - 1
 
 
-def make_plan(cfg: ModelConfig, n_stages: int) -> PartitionPlan:
+def make_plan(cfg: ModelConfig, n_stages: int, strategy: str = "uniform",
+              **search_kw) -> PartitionPlan:
+    """Cut the group stack into ``n_stages`` contiguous stages.
+
+    strategy="uniform" (default) is the balanced contiguous divmod split;
+    strategy="auto" routes through the ``repro.plan`` cost-model searcher
+    (``search_kw`` — batch/seq/optimizer/objective — feeds its cost table).
+    """
     g = M.n_groups(cfg)
     if n_stages > g:
         raise ValueError(f"{n_stages} stages > {g} groups for {cfg.name}")
+    if strategy == "auto":
+        # lazy import: repro.plan imports PartitionPlan from this module
+        from repro import plan as plan_lib
+        return plan_lib.auto_plan(cfg, n_stages, **search_kw)
+    if strategy != "uniform":
+        raise ValueError(f"unknown partition strategy {strategy!r}; "
+                         "expected 'uniform' or 'auto'")
     # balanced contiguous split
     base, rem = divmod(g, n_stages)
     bounds = []

@@ -24,11 +24,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence, Tuple, Union
 
-import numpy as np
-
-# optimizer-state slots per param (fp32 each), for the byte estimate.
-# adafactor's factored second moments are ~sqrt-sized: negligible here.
-_OPT_SLOTS = {"sgd": 0, "sgdm": 1, "adam": 2, "adamw": 2, "adafactor": 0}
+# optimizer-state slots per param (fp32 each), for the byte estimate —
+# owned by the shared repro.plan cost model (single source of truth with
+# the dryrun tables and the auto-partitioner's searcher).
+from repro.plan.costs import OPT_SLOTS as _OPT_SLOTS
 
 
 @dataclass(frozen=True)
@@ -115,26 +114,19 @@ def memory_balanced(stage_bytes: Sequence[int],
 # --------------------------------------------------------------------------
 
 def tree_param_bytes(tree, itemsize: Optional[int] = None) -> int:
-    """Bytes of a param tree from shapes+dtypes alone — works for live
-    arrays, numpy arrays, and ``jax.ShapeDtypeStruct`` stand-ins.
-    ``itemsize`` overrides the per-leaf dtype width (e.g. 4 to size fp32
-    optimizer slots over half-precision params)."""
-    import jax
-    total = 0
-    for leaf in jax.tree_util.tree_leaves(tree):
-        n = int(np.prod(leaf.shape)) if getattr(leaf, "shape", ()) else 1
-        total += n * (itemsize if itemsize is not None
-                      else np.dtype(leaf.dtype).itemsize)
-    return total
+    """Bytes of a param tree from shapes+dtypes alone (delegates to the
+    shared ``repro.plan`` cost model; see its docstring)."""
+    from repro.plan.costs import tree_param_bytes as _tpb
+    return _tpb(tree, itemsize)
 
 
 def estimate_stage_bytes(stage_params, optimizer: str = "sgdm") -> int:
     """Resident bytes of one training stage: params + fp32 optimizer slots
-    (grads are transient under jit and excluded, matching the per-stage
-    numbers ``launch/dryrun.py --mode pnn`` reports)."""
-    pb = tree_param_bytes(stage_params)
-    slots = _OPT_SLOTS.get(optimizer, 2)
-    return pb + slots * tree_param_bytes(stage_params, itemsize=4)
+    (delegates to ``repro.plan.costs.estimate_stage_bytes`` — the same
+    numbers ``launch/dryrun.py --mode pnn`` and the auto-partitioner's
+    searcher use, so packing and boundary search can never disagree)."""
+    from repro.plan.costs import estimate_stage_bytes as _esb
+    return _esb(stage_params, optimizer)
 
 
 def resolve(plan: Union[PlacementPlan, str], n_stages: int, *,

@@ -110,9 +110,11 @@ def model_flops(cfg, shape) -> float:
 def dryrun_one(arch: str, shape_name: str, *, multi_pod=False, mode="baseline",
                seq_shard=False, rec_shard=False, accum_override=None,
                moe_local=False, mesh_shape=None, precision=None,
-               pnn_stages=2, dist_devices=None,
+               pnn_stages=2, pnn_strategy="uniform", dist_devices=None,
                verbose=True) -> Dict[str, Any]:
     shape = INPUT_SHAPES[shape_name]
+    if arch == "paper_mlp":
+        return _dryrun_mlp(shape_name, pnn_strategy, pnn_stages, mode=mode)
     cfg0 = get(arch)
     ok, reason = S.applicable(cfg0, shape)
     rec: Dict[str, Any] = {
@@ -165,6 +167,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod=False, mode="baseline",
         elif shape.kind == "train" and mode == "pnn":
             rec.update(_lower_pnn(cfg, shape, mesh, policy, params_struct,
                                   p_sh, seq_shard, n_stages=pnn_stages,
+                                  strategy=pnn_strategy,
                                   dist_devices=dist_devices))
         elif shape.kind == "prefill":
             rec.update(_lower_prefill(cfg, shape, mesh, policy, params_struct,
@@ -252,19 +255,27 @@ def _lower_decode(cfg, shape, mesh, policy, params_struct, p_sh):
 
 
 def _lower_pnn(cfg, shape, mesh, policy, params_struct, p_sh,
-               seq_shard=False, n_stages=2, dist_devices=None):
+               seq_shard=False, n_stages=2, strategy="uniform",
+               dist_devices=None):
     """Lower every PNN stage's step; report per-stage memory + collectives.
 
     This is the paper's claim measured: each stage's step touches only that
     stage's params/optimizer state, and stages train with zero inter-stage
     collectives (the pod axis carries nothing during training).
 
+    strategy="auto" cuts via the ``repro.plan`` searcher and attaches the
+    chosen cuts + predicted per-stage bytes/FLOPs next to the lowered
+    numbers.
+
     dist_devices: also report the memory-balanced ``repro.dist`` placement
     of the stages onto that many devices, packed by these same per-stage
     byte numbers.
     """
-    plan = partition.make_plan(cfg, n_stages=n_stages)
     opt_name = pick_optimizer_name(cfg)
+    plan = partition.make_plan(cfg, n_stages, strategy=strategy,
+                               **({"optimizer": opt_name}
+                                  if strategy == "auto" else {}))
+    plan_rec = _predicted_plan(cfg, plan, strategy, opt_name)
     stages = []
     for k in range(plan.n_stages):
         opt = make_optimizer(opt_name, 1e-3)
@@ -320,7 +331,7 @@ def _lower_pnn(cfg, shape, mesh, policy, params_struct, p_sh,
             "stage_opt_bytes_per_chip": sob,
         })
     out = {"optimizer": opt_name, "pnn_stages": stages,
-           "n_stages": plan.n_stages}
+           "n_stages": plan.n_stages, "plan": plan_rec}
     if dist_devices:
         # pack stages onto a smaller device set by the byte estimates just
         # computed — the plan repro.dist's "memory" strategy would pick
@@ -334,11 +345,78 @@ def _lower_pnn(cfg, shape, mesh, policy, params_struct, p_sh,
     return out
 
 
+def _predicted_plan(cfg, plan, strategy, opt_name):
+    """The ``repro.plan`` side of the PNN record: chosen cuts + the cost
+    model's predicted per-stage bytes/FLOPs, printed next to the lowered
+    per-stage tables so prediction and measurement sit side by side.
+
+    Predictions use the searcher's default SIL workload (DEFAULT_BATCH x
+    DEFAULT_SEQ — per-stage training batches, not the pretrain shape), the
+    same table ``make_plan(strategy="auto")`` optimized over."""
+    from repro import plan as plan_lib
+    table = plan_lib.lm_costs(cfg, optimizer=opt_name)
+    rows = table.stage_costs(plan.bounds)
+    return {
+        "strategy": strategy,
+        "bounds": [list(b) for b in plan.bounds],
+        "cuts": [int(hi) for _, hi in plan.bounds[:-1]],
+        "cost_batch": plan_lib.DEFAULT_BATCH,
+        "cost_seq": plan_lib.DEFAULT_SEQ,
+        "predicted_stages": [c.row() for c in rows],
+        "predicted_imbalance": round(plan_lib.predicted_imbalance(rows), 6),
+        "predicted_bottleneck_bytes": int(max(c.bytes_total for c in rows)),
+    }
+
+
+def _dryrun_mlp(shape_name: str, strategy: str, n_stages: int,
+                mode: str = "pnn"):
+    """Paper-MLP dry-run: no mesh (the MLP trains on one host) — report the
+    chosen stage bounds + predicted per-stage bytes/FLOPs from the same
+    ``repro.plan`` cost table the train CLI and auto-searcher use."""
+    rec: Dict[str, Any] = {"arch": "paper_mlp", "shape": shape_name,
+                           "mode": mode}
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind != "train":
+        rec["status"] = "skipped"
+        rec["reason"] = "paper_mlp only trains (no prefill/decode shapes)"
+        return rec
+    if mode != "pnn":
+        rec["status"] = "skipped"
+        rec["reason"] = "paper_mlp dry-run reports the PNN plan; " \
+                        "use --mode pnn"
+        return rec
+    from repro import plan as plan_lib
+    from repro.train.backends import mlp_default_bounds
+    t0 = time.time()
+    cfg = get("paper_mlp")
+    table = plan_lib.mlp_costs(cfg)
+    if strategy == "auto":
+        bounds = plan_lib.auto_bounds(table, n_stages)
+    else:
+        bounds = mlp_default_bounds(cfg, n_stages)
+    rows = table.stage_costs(bounds)
+    rec["n_stages"] = n_stages
+    rec["optimizer"] = table.optimizer
+    rec["plan"] = {
+        "strategy": strategy,
+        "bounds": [list(b) for b in bounds],
+        "cuts": [int(hi) for _, hi in bounds[:-1]],
+        "predicted_stages": [c.row() for c in rows],
+        "predicted_imbalance": round(plan_lib.predicted_imbalance(rows), 6),
+        "predicted_bottleneck_bytes": int(max(c.bytes_total for c in rows)),
+    }
+    rec["n_chips"] = 1
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    rec["status"] = "ok"
+    return rec
+
+
 # --------------------------------------------------------------------------
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default=None, choices=ARCH_NAMES + ["all"])
+    ap.add_argument("--arch", default=None,
+                    choices=ARCH_NAMES + ["all", "paper_mlp"])
     ap.add_argument("--shape", default=None,
                     choices=list(INPUT_SHAPES) + ["all"])
     ap.add_argument("--all", action="store_true")
@@ -360,14 +438,19 @@ def main(argv=None):
                     choices=["fp32", "bf16", "fp16"],
                     help="precision policy for the compute path (activation "
                          "+ cache dtypes; params keep their storage dtype)")
-    ap.add_argument("--stages", type=int, default=2,
-                    help="PNN partition count for --mode pnn")
+    ap.add_argument("--stages", default="2",
+                    help="PNN partitioning for --mode pnn: N (uniform "
+                         "split), 'auto' (repro.plan searched boundaries, "
+                         "K=2), or 'auto:K'")
     ap.add_argument("--dist-devices", type=int, default=None,
                     help="report the memory-balanced repro.dist placement "
                          "of the PNN stages onto N devices")
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args(argv)
+
+    from repro.plan import parse_stages
+    pnn_strategy, pnn_stages = parse_stages(args.stages)
 
     archs = ARCH_NAMES if (args.all or args.arch in (None, "all")) \
         else [args.arch]
@@ -397,8 +480,9 @@ def main(argv=None):
                 variant += f"+accum{args.accum}"
             if args.precision:
                 variant += f"+{args.precision}"
-            if args.mode == "pnn" and args.stages != 2:
-                variant += f"+stages{args.stages}"
+            if args.mode == "pnn" and (pnn_strategy != "uniform"
+                                       or pnn_stages != 2):
+                variant += f"+stages{args.stages.strip().lower()}"
             if args.mode == "pnn" and args.dist_devices:
                 variant += f"+dist{args.dist_devices}"
             is_multi = args.multi_pod or args.mode == "pipeline"
@@ -419,7 +503,8 @@ def main(argv=None):
                                                   args.mesh.split("x"))
                                  if args.mesh else None,
                                  precision=args.precision,
-                                 pnn_stages=args.stages,
+                                 pnn_stages=pnn_stages,
+                                 pnn_strategy=pnn_strategy,
                                  dist_devices=args.dist_devices)
             except Exception as e:
                 rec = {"arch": arch, "shape": shape, "status": "error",
@@ -438,6 +523,15 @@ def main(argv=None):
                           f"collective={a['collective_s']*1e3:.2f}ms "
                           f"dominant={a['dominant']}")
                 else:
+                    if "plan" in rec:
+                        p = rec["plan"]
+                        print(f"  plan[{p['strategy']}]: cuts {p['cuts']} "
+                              f"pred-imbalance {p['predicted_imbalance']:.3f}")
+                        for r in p["predicted_stages"]:
+                            print(f"    stage{r['stage']} "
+                                  f"units{r['units']}: "
+                                  f"pred {r['bytes_total']/2**20:.0f}MiB "
+                                  f"flops {r['flops']:.3g}")
                     for st in rec.get("pnn_stages", []):
                         a = st["analysis"]
                         print(f"  stage{st['stage']}: "

@@ -8,6 +8,10 @@ Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
       --steps 20 --batch 8 --seq 128 [--mode pnn --stages 2] [--seq-shard]
       [--dist round_robin --devices 8] [--resume ckpts/run1]
+
+``--stages`` accepts a count (uniform split), ``auto`` (cost-model searched
+boundaries via ``repro.plan``, default K=2), or ``auto:K``.  ``--arch
+paper_mlp`` runs the paper's EMNIST MLP experiment through the same flags.
 """
 from __future__ import annotations
 
@@ -34,15 +38,20 @@ from repro.train import StageSpec, TrainSpec, recipes
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b", choices=ARCH_NAMES)
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=ARCH_NAMES + ["paper_mlp"])
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
-    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--steps", type=int, default=20,
+                    help="LM: optimizer steps; paper_mlp: epochs per stage")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--mode", default="baseline", choices=["baseline", "pnn"])
-    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--stages", default="2",
+                    help="PNN partition count: N (uniform split), 'auto' "
+                         "(repro.plan searched boundaries, K=2), or "
+                         "'auto:K'")
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--precision", default=None,
                     choices=["fp32", "bf16", "fp16"],
@@ -80,6 +89,12 @@ def main():
         raise SystemExit("--dist requires --mode pnn (stage placement only "
                          "exists for partitioned training)")
 
+    from repro.plan import parse_stages
+    stage_strategy, n_stages = parse_stages(args.stages)
+
+    if args.arch == "paper_mlp":
+        return _run_paper_mlp(args, stage_strategy, n_stages)
+
     cfg = get(args.arch, smoke=args.smoke)
     prec = None
     if args.precision:
@@ -113,13 +128,14 @@ def main():
         # repro.dist: every stage trains simultaneously, each pinned to its
         # own device (Fig. 5 actually executed; see src/repro/dist/)
         from repro.launch.mesh import stage_devices
-        devs = stage_devices(args.devices or min(args.stages, n_dev))
-        plan = partition.make_plan(cfg, args.stages)
+        devs = stage_devices(args.devices or min(n_stages, n_dev))
+        plan = partition.make_plan(cfg, n_stages, strategy=stage_strategy)
+        _print_plan(stage_strategy, plan)
         spec = TrainSpec(
-            n_stages=args.stages, kappa=1.0, precision=args.precision,
+            n_stages=n_stages, kappa=1.0, precision=args.precision,
             stages=tuple(StageSpec(steps=args.steps, lr=args.lr,
                                    optimizer="adamw", accum=args.accum)
-                         for _ in range(args.stages)))
+                         for _ in range(n_stages)))
         ckpt_dir = os.path.join(args.ckpt_dir, "stages") \
             if args.ckpt_dir else None
 
@@ -155,13 +171,14 @@ def main():
                 "--seq-shard with --mode pnn requires the production mesh "
                 f"(>=256 devices; have {n_dev}). Run without --seq-shard "
                 "or on a full slice.")
-        plan = partition.make_plan(cfg, args.stages)
+        plan = partition.make_plan(cfg, n_stages, strategy=stage_strategy)
+        _print_plan(stage_strategy, plan)
         spec = TrainSpec(
-            n_stages=args.stages, kappa=1.0, precision=args.precision,
-            stages=tuple(StageSpec(steps=args.steps // args.stages,
+            n_stages=n_stages, kappa=1.0, precision=args.precision,
+            stages=tuple(StageSpec(steps=args.steps // n_stages,
                                    lr=args.lr, optimizer="adamw",
                                    accum=args.accum)
-                         for _ in range(args.stages)),
+                         for _ in range(n_stages)),
             recovery=StageSpec(steps=args.steps // 4, lr=args.lr / 10,
                                optimizer="adamw", accum=args.accum))
         params, hist = recipes.run_lm_sequential(
@@ -218,6 +235,62 @@ def main():
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, step0 + args.steps,
                                {"params": params})
+        print("saved:", path)
+
+
+def _print_plan(strategy: str, plan) -> None:
+    if strategy == "auto":
+        print(f"plan[auto]: {plan.n_stages} stages, searched bounds "
+              f"{plan.bounds} (repro.plan cost-model cut)")
+    else:
+        print(f"plan[uniform]: {plan.n_stages} stages, bounds {plan.bounds}")
+
+
+def _run_paper_mlp(args, strategy: str, n_stages: int):
+    """The paper's EMNIST MLP through the same CLI: baseline, or PNN with
+    uniform/paper/searched stage bounds (``--steps`` = epochs per stage)."""
+    from repro import plan as plan_lib
+    from repro.data.images import emnist_like
+    from repro.train import recipes
+    from repro.train.backends import mlp_default_bounds, mlp_test_accuracy
+
+    cfg = get("paper_mlp", smoke=args.smoke)
+    n_train, n_test = (9400, 940) if args.smoke else (28200, 2820)
+    data = emnist_like(n_train=n_train, n_test=n_test, seed=0, noise=0.5)
+    epochs = args.steps
+    spec = TrainSpec(
+        batch_size=1410, kappa=10.0, shuffle=True, n_stages=n_stages,
+        precision=args.precision,
+        stages=tuple(StageSpec(epochs=epochs, lr=0.01, optimizer="sgdm",
+                               momentum=0.9) for _ in range(n_stages)),
+        baseline=StageSpec(epochs=epochs, lr=0.01, optimizer="sgdm",
+                           momentum=0.9))
+    key = jax.random.PRNGKey(0)  # repro: allow-const-key
+    if args.mode == "baseline":
+        params, hist = recipes.run_mlp_baseline(cfg, data, spec, key)
+    else:
+        if strategy == "auto":
+            bounds = plan_lib.auto_mlp_bounds(cfg, n_stages,
+                                              batch_size=spec.batch_size)
+        else:
+            bounds = mlp_default_bounds(cfg, n_stages)
+        table = plan_lib.mlp_costs(cfg, batch_size=spec.batch_size)
+        rows = table.stage_costs(bounds)
+        print(f"plan[{strategy}]: {n_stages} stages, bounds {bounds}")
+        for c in rows:
+            print(f"  stage{c.stage}: layers[{c.lo},{c.hi}) "
+                  f"bytes={c.bytes_total:,} flops={c.flops:.3g}")
+        if args.dist != "none":
+            params, hist = recipes.run_mlp_fig5(
+                cfg, data, spec, key, n_stages=n_stages, bounds=bounds,
+                dist=args.dist)
+        else:
+            params, hist = recipes.run_mlp_fig5(
+                cfg, data, spec, key, n_stages=n_stages, bounds=bounds)
+    acc = mlp_test_accuracy(cfg, params, data[2], data[3])
+    print(f"paper_mlp {args.mode}: test acc {acc:.4f}")
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, epochs, {"params": params})
         print("saved:", path)
 
 

@@ -120,9 +120,25 @@ def scanned_epoch_fn(step):
 # MLP backend (paper §3-§5)
 # ==========================================================================
 
-def balanced_bounds(cfg: MLP.MLPConfig, n_stages: int
-                    ) -> Tuple[Tuple[int, int], ...]:
-    """Balanced contiguous layer split (the legacy fig-5 scheme)."""
+def balanced_bounds(cfg: MLP.MLPConfig, n_stages: int, *,
+                    costs=None) -> Tuple[Tuple[int, int], ...]:
+    """Balanced contiguous layer split (the legacy fig-5 scheme).
+
+    ``costs`` routes through the ``repro.plan`` bottleneck searcher instead:
+    pass a ``plan.ModelCosts`` table (head/tail-overhead-aware), a per-layer
+    scalar cost sequence, or ``"auto"`` to build the MLP cost table from the
+    config (paper batch size, sgdm slots)."""
+    if costs is not None:
+        from repro import plan as plan_lib
+        if isinstance(costs, str):
+            if costs != "auto":
+                raise ValueError(f"bad costs={costs!r}; expected 'auto', a "
+                                 "ModelCosts table, or a scalar sequence")
+            return plan_lib.auto_mlp_bounds(cfg, n_stages)
+        if isinstance(costs, plan_lib.ModelCosts):
+            return plan_lib.solve(costs, n_stages)
+        from repro.plan.search import searched_bounds_for_sequence
+        return searched_bounds_for_sequence(costs, n_stages)
     base, rem = divmod(cfg.n_layers, n_stages)
     bounds, s = [], 0
     for k in range(n_stages):

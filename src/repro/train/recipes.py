@@ -102,13 +102,17 @@ def run_mlp_baseline(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
 
 
 def run_mlp_fig3(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
-                 eval_every: int = 1):
+                 eval_every: int = 1, *, bounds=None):
     """Fig. 3 (+ §5 recovery when spec.recovery has epochs).
 
     Key schedule (legacy-exact): kp, ks = split(key); params from kp, the
-    single cut's SIL from ks."""
+    single cut's SIL from ks.
+
+    bounds: stage bounds override — e.g. ``repro.plan.auto_mlp_bounds``'s
+    searched cut instead of the paper's hand cut (the SIL width follows
+    the boundary automatically)."""
     spec = _with_eval(spec, eval_every)
-    backend = MLPBackend(cfg, data, spec)
+    backend = MLPBackend(cfg, data, spec, bounds=bounds)
     kp, ks = jax.random.split(
         jax.random.PRNGKey(0) if key is None else key)  # repro: allow-const-key
     params = MLP.init_params(cfg, kp)
@@ -119,15 +123,18 @@ def run_mlp_fig3(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
 
 
 def run_mlp_fig5(cfg: MLP.MLPConfig, data, spec: TrainSpec, key,
-                 n_stages: int = 3, *, dist=None, dist_devices=None,
-                 ckpt_dir=None, ckpt_every: int = 0):
+                 n_stages: int = 3, *, bounds=None, dist=None,
+                 dist_devices=None, ckpt_dir=None, ckpt_every: int = 0):
     """Fig. 5 all-parallel mode.  Key schedule (legacy-exact):
     split(key, n_stages + 2); params from keys[0], SIL k from keys[1 + k].
 
+    bounds: stage bounds override (e.g. a ``repro.plan`` searched cut);
+    default keeps the legacy balanced layer-count split.
     dist: a ``repro.dist`` PlacementPlan or strategy name — routes the
     parallel phase through the device-placed ``StageExecutor``."""
     backend = MLPBackend(cfg, data, spec,
-                         bounds=balanced_bounds(cfg, n_stages))
+                         bounds=bounds if bounds is not None
+                         else balanced_bounds(cfg, n_stages))
     keys = jax.random.split(key, n_stages + 2)
     params = MLP.init_params(cfg, keys[0])
     sils = [sil_lib.make_sil(keys[1 + k], backend.boundary_width(k),
@@ -148,10 +155,25 @@ def _with_eval(spec: TrainSpec, eval_every: int) -> TrainSpec:
 # transformer entry points
 # --------------------------------------------------------------------------
 
+def resolve_plan(cfg, plan):
+    """Accept a PartitionPlan as-is, or a spec for one: an int (uniform
+    K-way split) or ``"auto"`` / ``"auto:K"`` (the ``repro.plan`` searched
+    cut).  Both LM entry points route through this, so callers can hand the
+    CLI's ``--stages`` string straight in."""
+    from repro.core import partition
+    if isinstance(plan, partition.PartitionPlan):
+        return plan
+    from repro.plan import parse_stages
+    strategy, k = parse_stages(plan)
+    return partition.make_plan(cfg, k, strategy=strategy)
+
+
 def run_lm_sequential(cfg, plan, params, batch_fn: Callable[[int], dict],
                       spec: TrainSpec, key, *, shard_x=None,
                       grad_pspecs_fn=None):
-    """Stage-sequential PNN over a PartitionPlan (legacy pnn_train_lm)."""
+    """Stage-sequential PNN over a PartitionPlan (legacy pnn_train_lm).
+    ``plan`` may also be an int or ``"auto[:K]"`` — see ``resolve_plan``."""
+    plan = resolve_plan(cfg, plan)
     backend = LMBackend(cfg, plan, batch_fn, spec, shard_x=shard_x,
                         grad_pspecs_fn=grad_pspecs_fn)
     recovery = bool(spec.recovery and spec.recovery.steps)
@@ -166,8 +188,11 @@ def run_lm_parallel(cfg, plan, params, batch_fn: Callable[[int], dict],
                     ckpt_dir=None, ckpt_every: int = 0):
     """Fig.-5 all-parallel mode at transformer scale.
 
+    ``plan`` may be a PartitionPlan, an int, or ``"auto[:K]"`` (searched
+    cut) — see ``resolve_plan``.
     dist / dist_devices / ckpt_*: ``repro.dist`` routing — place each stage
     on its own device and checkpoint each stage independently."""
+    plan = resolve_plan(cfg, plan)
     backend = LMBackend(cfg, plan, batch_fn, spec, shard_x=shard_x,
                         grad_pspecs_fn=grad_pspecs_fn)
     phase = ParallelSilPhase(plan=dist, devices=dist_devices,

@@ -288,6 +288,59 @@ def _resume_vs_uninterrupted(ctx: Context):
 
 
 # ==========================================================================
+# plan: the auto-partitioner's searched cut is as trainable as the hand cut
+# ==========================================================================
+
+def _plan_policy(ctx: Context):
+    # budgets mirror the paper gate's presets: both runs sit on the same
+    # (reduced or full) schedule, so the cut is the only variable
+    return AccuracyGap(budget=0.05 if ctx.preset == "tiny" else 0.02,
+                       floor=0.6)
+
+
+@register("plan/auto_vs_hand",
+          "Fig.-3 SIL training at the repro.plan searched cut matches the "
+          "paper's hand-picked cut within the accuracy budget; on an "
+          "equal-width MLP every balanced cut ties and the searcher "
+          "reproduces the divmod hand bounds exactly",
+          _plan_policy, tags=("plan", "train"))
+def _plan_auto_vs_hand(ctx: Context):
+    from repro import plan as plan_lib
+    from repro.configs import get as get_cfg
+    from repro.data.images import emnist_like
+    from repro.models.mlp import MLPConfig
+    from repro.train import recipes
+    from repro.train.backends import mlp_default_bounds, mlp_test_accuracy
+
+    # exact-tie determinism: an equal-width stack makes every balanced cut
+    # tie at the optimal bottleneck, and the tie-break must reproduce the
+    # hand (divmod) bounds bit-for-bit — auto is a drop-in there
+    ucfg = MLPConfig(sizes=(32,) * 7, cut=3)
+    for k in (1, 2, 3):
+        auto_b = plan_lib.auto_mlp_bounds(ucfg, k)
+        hand_b = mlp_default_bounds(ucfg, k)
+        assert auto_b == hand_b, \
+            f"tie-break drifted at K={k}: {auto_b} != {hand_b}"
+
+    # accuracy parity on the paper's (non-uniform) MLP, where the searcher
+    # picks its own cut: same data, spec, and key schedule for both runs.
+    # The right stage ramps late (lr_right=0.003): ~80 epochs is where the
+    # boundary-trained head separates from chance, so the tiny preset uses
+    # the paper gate's own tiny schedule rather than a shorter one
+    cfg = get_cfg("paper_mlp")
+    n_right, n_recovery = (80, 20) if ctx.preset == "tiny" else (160, 10)
+    data = emnist_like(n_train=28200, n_test=2820, seed=0, noise=0.5)
+    spec = recipes.paper_spec(n_right=n_right, n_baseline=0,
+                              n_recovery=n_recovery)
+    key = jax.random.PRNGKey(1)
+    p_hand, _ = recipes.run_mlp_fig3(cfg, data, spec, key)
+    p_auto, _ = recipes.run_mlp_fig3(
+        cfg, data, spec, key, bounds=plan_lib.auto_mlp_bounds(cfg, 2))
+    return (mlp_test_accuracy(cfg, p_hand, data[2], data[3]),
+            mlp_test_accuracy(cfg, p_auto, data[2], data[3]))
+
+
+# ==========================================================================
 # paper: the reproduction gate (EMNIST 6-layer / 2-stage SIL experiment)
 # ==========================================================================
 

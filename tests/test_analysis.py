@@ -268,6 +268,7 @@ def test_entry_points_cover_all_surfaces(clean_results):
     assert set(mlp) == {"train/mlp_sil_epoch", "train/mlp_parallel_epoch",
                         "sil/lookup_loss"}
     assert set(lm) == {"train/lm_stage_step", "train/lm_parallel_stage_step",
+                       "train/lm_auto_parallel_stage_step",
                        "serve/prefill_admit", "serve/decode_chunk",
                        "sil/lookup_loss"}
     for art in list(mlp.values()) + list(lm.values()):

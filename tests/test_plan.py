@@ -1,0 +1,280 @@
+"""repro.plan unit tests: the cost model's numbers, the bottleneck DP
+against brute force, tie-break determinism, the CLI surfaces, and the
+placement dedup regression.
+
+These mirror the hypothesis properties in test_property.py with seeded
+cases so the invariants are exercised even where hypothesis isn't
+installed (it's a CI-only dependency).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import plan as plan_lib
+from repro.configs import ARCH_NAMES, get
+from repro.models.mlp import MLPConfig
+from repro.plan.costs import ModelCosts
+from repro.plan.search import (brute_force_bounds, searched_bounds_for_sequence,
+                               solve, stage_objective, uniform_bounds)
+
+
+def table(units, head=0, tail=0, boundary=None, optimizer="sgd"):
+    n = len(units)
+    return ModelCosts(
+        kind="mlp", n_units=n, optimizer=optimizer,
+        unit_param_bytes=tuple(units), unit_param_elems=(0,) * n,
+        unit_act_bytes=(0,) * n,
+        unit_flops=tuple(float(u) for u in units),
+        unit_boundary_bytes=tuple(boundary or (0,) * n),
+        head_param_bytes=head, tail_param_bytes=tail)
+
+
+def bottleneck(tab, bounds, objective="bytes"):
+    cost = stage_objective(tab, objective)
+    k = len(bounds)
+    return max(cost(lo, hi, i, k) for i, (lo, hi) in enumerate(bounds))
+
+
+# ==========================================================================
+# the searcher
+# ==========================================================================
+
+def test_solver_matches_brute_force_randomized():
+    rng = np.random.RandomState(0)
+    for trial in range(40):
+        n = int(rng.randint(2, 11))
+        k = int(rng.randint(1, min(n, 4) + 1))
+        units = rng.randint(1, 200, size=n).tolist()
+        tab = table(units, head=int(rng.randint(0, 500)),
+                    tail=int(rng.randint(0, 500)))
+        best, _ = brute_force_bounds(tab, k)
+        got = bottleneck(tab, solve(tab, k))
+        assert abs(got - best) <= 1e-9 * max(1.0, best), \
+            (trial, units, k, got, best)
+
+
+def test_solver_bounds_are_valid_partitions():
+    rng = np.random.RandomState(1)
+    for _ in range(40):
+        n = int(rng.randint(1, 30))
+        k = int(rng.randint(1, n + 1))
+        tab = table(rng.randint(1, 1000, size=n).tolist(),
+                    head=int(rng.randint(0, 5000)),
+                    tail=int(rng.randint(0, 5000)))
+        bounds = solve(tab, k)
+        assert bounds[0][0] == 0 and bounds[-1][1] == n
+        assert all(hi > lo for lo, hi in bounds)          # no empty stages
+        for (_, a1), (b0, _) in zip(bounds, bounds[1:]):  # contiguous
+            assert a1 == b0
+        cuts = [hi for _, hi in bounds[:-1]]
+        assert cuts == sorted(cuts) and len(set(cuts)) == len(cuts)
+        assert bottleneck(tab, bounds) \
+            <= bottleneck(tab, uniform_bounds(n, k)) + 1e-9
+
+
+def test_k1_is_the_whole_model():
+    tab = table([5, 1, 9, 2])
+    assert solve(tab, 1) == ((0, 4),)
+
+
+def test_uniform_units_reproduce_divmod_bounds():
+    """Exact-tie determinism: equal units -> the hand (divmod) split."""
+    for n in (4, 6, 7, 12):
+        for k in (1, 2, 3, 4):
+            assert solve(table([64] * n), k) == uniform_bounds(n, k)
+
+
+def test_head_overhead_shrinks_stage_zero():
+    # 8 equal units + a head 3 units heavy: stage 0 should take fewer units
+    tab = table([100] * 8, head=300)
+    bounds = solve(tab, 2)
+    assert bounds[0][1] < 4
+    assert bottleneck(tab, bounds) < bottleneck(tab, uniform_bounds(8, 2))
+
+
+def test_searched_bounds_for_sequence():
+    # classic chains-on-chains: [9,1,1,1,9] at K=2 must cut after unit 0
+    # ... no — bottleneck optimum puts the two 9s apart: cut in the middle
+    bounds = searched_bounds_for_sequence([9, 1, 1, 1, 9], 2)
+    assert bounds in (((0, 1), (1, 5)), ((0, 4), (4, 5)),
+                      ((0, 2), (2, 5)), ((0, 3), (3, 5)))
+    sizes = [sum([9, 1, 1, 1, 9][lo:hi]) for lo, hi in bounds]
+    assert max(sizes) <= 12  # never both 9s in one stage
+
+
+def test_frontier_records_rejected_alternatives():
+    tab = table([10, 20, 30, 40, 50])
+    chosen = solve(tab, 2)
+    rows = plan_lib.frontier(tab, 2, chosen)
+    assert rows, "frontier must not be empty on a 5-unit lattice"
+    assert all(tuple(map(tuple, r["bounds"])) != chosen for r in rows)
+    assert all(r["vs_chosen"] >= 1.0 - 1e-9 for r in rows)
+    assert rows == sorted(rows, key=lambda r: (r["bottleneck"], r["bounds"]))
+
+
+def test_search_report_shape():
+    rep = plan_lib.search_report(table([10, 20, 30, 40]), 2)
+    for key in ("objective", "n_units", "n_stages", "optimizer", "auto",
+                "uniform", "auto_le_uniform", "rejected_frontier"):
+        assert key in rep
+    assert rep["auto_le_uniform"] is True
+    assert len(rep["auto"]["stages"]) == 2
+
+
+# ==========================================================================
+# the cost model
+# ==========================================================================
+
+def test_mlp_cost_numbers():
+    cfg = MLPConfig()        # sizes (784, 80, 60, 60, 60, 47)
+    tab = plan_lib.mlp_costs(cfg, batch_size=1410, optimizer="sgdm")
+    assert tab.n_units == cfg.n_layers == 5
+    # layer 0: 784*80 weights + 80 bias, fp32
+    assert tab.unit_param_bytes[0] == (784 * 80 + 80) * 4
+    assert tab.unit_flops[0] == 6.0 * 1410 * 784 * 80
+    assert tab.unit_boundary_bytes[0] == 1410 * 80 * 4
+    # sgdm: 1 fp32 slot per trainable element
+    sc = tab.stage_cost(0, 1, 0, 2)
+    assert sc.opt_bytes == (784 * 80 + 80) * 4
+    assert sc.boundary_bytes == 1410 * 80 * 4
+
+
+def test_lm_cost_model_accounts_head_and_tail():
+    cfg = get("qwen2-1.5b")
+    tab = plan_lib.lm_costs(cfg)
+    assert tab.kind == "lm"
+    # tied embeddings: the tail carries a FROZEN snapshot (param bytes,
+    # no optimizer slots), the head carries the trainable table
+    assert cfg.tie_embeddings
+    assert tab.tail_frozen_bytes > 0
+    assert tab.head_param_bytes >= tab.tail_frozen_bytes
+    first = tab.stage_cost(0, 1, 0, 2)
+    last = tab.stage_cost(1, tab.n_units, 1, 2)
+    interior = tab.stage_cost(1, 2, 1, 3)
+    # head/tail overheads only land on their stages
+    assert first.params_bytes > interior.params_bytes
+    assert last.boundary_bytes == 0 and first.boundary_bytes > 0
+    # frozen snapshot contributes zero slot bytes: opt bytes of the last
+    # stage equal slots * (groups-elems + trainable tail elems) * 4
+    g_elems = tab.unit_param_elems[0] * (tab.n_units - 1)
+    assert last.opt_bytes == tab.slots * (g_elems + tab.tail_param_elems) * 4
+
+
+def test_estimate_stage_bytes_excludes_frozen_snapshot_slots():
+    import jax.numpy as jnp
+    sp = {"groups": jnp.zeros((4, 8), jnp.float32),
+          "tied_unembed": jnp.zeros((16, 8), jnp.float32)}
+    got = plan_lib.estimate_stage_bytes(sp, optimizer="adamw")
+    assert got == (4 * 8 + 16 * 8) * 4 + 2 * (4 * 8) * 4
+
+
+def test_auto_plan_beats_uniform_on_qwen():
+    cfg = get("qwen2-1.5b")
+    tab = plan_lib.lm_costs(cfg)
+    auto = plan_lib.auto_bounds(tab, 4)
+    uni = uniform_bounds(tab.n_units, 4)
+    assert auto != uni
+    assert bottleneck(tab, auto) < bottleneck(tab, uni)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_every_arch_gets_a_valid_auto_plan(arch):
+    from repro.core import partition
+    from repro.models import model as M
+    cfg = get(arch)
+    g = M.n_groups(cfg)
+    k = min(4, g)
+    plan = partition.make_plan(cfg, k, strategy="auto")
+    assert isinstance(plan, partition.PartitionPlan)
+    assert plan.n_stages == k
+    assert plan.bounds[0][0] == 0 and plan.bounds[-1][1] == g
+    assert all(hi > lo for lo, hi in plan.bounds)
+
+
+def test_make_plan_rejects_unknown_strategy():
+    with pytest.raises(ValueError, match="strategy"):
+        from repro.core import partition
+        partition.make_plan(get("qwen2-1.5b"), 2, strategy="greedy")
+
+
+# ==========================================================================
+# wiring: parse_stages, balanced_bounds costs=, placement dedup
+# ==========================================================================
+
+def test_parse_stages():
+    assert plan_lib.parse_stages("3") == ("uniform", 3)
+    assert plan_lib.parse_stages(4) == ("uniform", 4)
+    assert plan_lib.parse_stages("auto") == ("auto", 2)
+    assert plan_lib.parse_stages("AUTO:5") == ("auto", 5)
+    for bad in ("auto:", "auto:x", "fast", "-1", "2.5"):
+        with pytest.raises(ValueError):
+            plan_lib.parse_stages(bad)
+
+
+def test_balanced_bounds_costs_routes():
+    from repro.train.backends import balanced_bounds
+    cfg = MLPConfig()
+    legacy = balanced_bounds(cfg, 2)
+    assert balanced_bounds(cfg, 2, costs=None) == legacy
+    auto = balanced_bounds(cfg, 2, costs="auto")
+    assert auto == plan_lib.auto_mlp_bounds(cfg, 2)
+    seq = balanced_bounds(cfg, 2, costs=[9, 1, 1, 1, 9])
+    assert seq == searched_bounds_for_sequence([9, 1, 1, 1, 9], 2)
+    tab = plan_lib.mlp_costs(cfg)
+    assert balanced_bounds(cfg, 2, costs=tab) == solve(tab, 2)
+    with pytest.raises(ValueError):
+        balanced_bounds(cfg, 2, costs="magic")
+
+
+def test_placement_packing_unchanged_after_dedup():
+    """Regression: memory_balanced on the PR-4 fixture sizes must pack
+    exactly as before _OPT_SLOTS moved into repro.plan."""
+    from repro.dist.placement import memory_balanced
+    pl = memory_balanced([100, 60, 40, 30, 30, 10],
+                         devices=(0, 1, 2))
+    assert pl.assignments == (0, 1, 2, 2, 1, 2)
+    assert pl.loads == (100, 90, 80)
+    from repro.dist import placement
+    from repro.plan.costs import OPT_SLOTS
+    assert placement._OPT_SLOTS is OPT_SLOTS
+
+
+def test_resolve_plan_accepts_specs():
+    from repro.core import partition
+    from repro.train.recipes import resolve_plan
+    cfg = get("qwen2-1.5b", smoke=True)
+    p1 = resolve_plan(cfg, 2)
+    assert p1.n_stages == 2
+    p2 = resolve_plan(cfg, "auto:2")
+    assert isinstance(p2, partition.PartitionPlan) and p2.n_stages == 2
+    assert resolve_plan(cfg, p2) is p2
+
+
+# ==========================================================================
+# the plan CLI (results/PLAN_7.json)
+# ==========================================================================
+
+def test_plan_cli_writes_schema_versioned_report(tmp_path):
+    from repro.launch import plan as plan_cli
+    out = tmp_path / "PLAN_7.json"
+    rc = plan_cli.main(["--arch", "qwen2-1.5b", "--stages", "4",
+                        "--out", str(out), "--assert-nonuniform"])
+    assert rc == 0
+    rep = json.loads(out.read_text())
+    assert rep["schema"] == 1 and rep["n_stages"] == 4
+    arch = rep["archs"]["qwen2-1.5b"]
+    assert arch["auto_le_uniform"] is True
+    assert arch["auto"]["cuts"] != arch["uniform"]["cuts"]
+    assert arch["auto"]["imbalance"] <= arch["uniform"]["imbalance"]
+    assert arch["rejected_frontier"]
+
+
+def test_plan_cli_assert_flag_fails_on_degenerate_cut(tmp_path):
+    # grok's groups are so uniform the searched cut IS the uniform split;
+    # the CI assert flag must flag that loudly rather than pass vacuously
+    from repro.launch import plan as plan_cli
+    rc = plan_cli.main(["--arch", "grok-1-314b", "--stages", "4",
+                        "--out", str(tmp_path / "p.json"),
+                        "--assert-nonuniform"])
+    assert rc == 1

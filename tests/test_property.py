@@ -18,6 +18,7 @@ import pytest
 pytest.importorskip("hypothesis")   # optional dep; skip, don't error
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.configs import ARCH_NAMES
 from repro.core import sil as sil_lib
 from repro.core.losses import cross_entropy
 from repro.models import layers as L
@@ -207,6 +208,107 @@ def test_scheduler_random_admit_retire_sequences(n_slots, choices):
     retires = sum(1 for e, _ in sched.events if e == "retire")
     assert admits - retires == len(sched.active)
     assert sched.max_concurrent <= n_slots
+
+
+# --------------------------------------------------------------------------
+# repro.plan: the auto-partitioner's searcher invariants
+# --------------------------------------------------------------------------
+
+def _plan_table(units, head=0, tail=0, boundary=None):
+    """A ModelCosts table from bare per-unit byte weights (+ optional
+    head/tail stage overheads), the searcher's full input surface."""
+    from repro.plan.costs import ModelCosts
+    n = len(units)
+    return ModelCosts(
+        kind="mlp", n_units=n, optimizer="sgd",
+        unit_param_bytes=tuple(units), unit_param_elems=(0,) * n,
+        unit_act_bytes=(0,) * n,
+        unit_flops=tuple(float(u) for u in units),
+        unit_boundary_bytes=tuple(boundary or (0,) * n),
+        head_param_bytes=head, tail_param_bytes=tail)
+
+
+def _bottleneck(table, bounds):
+    from repro.plan.search import stage_objective
+    cost = stage_objective(table, "bytes")
+    k = len(bounds)
+    return max(cost(lo, hi, i, k) for i, (lo, hi) in enumerate(bounds))
+
+
+@given(units=st.lists(st.integers(1, 1000), min_size=1, max_size=24),
+       head=st.integers(0, 5000), tail=st.integers(0, 5000),
+       k=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_plan_solver_invariants(units, head, tail, k):
+    """Searched bounds are a contiguous cover with no empty stage and
+    strictly increasing cuts; K=1 is the whole model; the predicted
+    bottleneck never exceeds the uniform split's."""
+    from repro.plan.search import solve, uniform_bounds
+    if k > len(units):
+        return
+    n = len(units)
+    table = _plan_table(units, head=head, tail=tail)
+    bounds = solve(table, k)
+    assert bounds[0][0] == 0 and bounds[-1][1] == n
+    for (_, a1), (b0, _) in zip(bounds, bounds[1:]):
+        assert a1 == b0
+    assert all(hi > lo for lo, hi in bounds)
+    cuts = [hi for _, hi in bounds[:-1]]
+    assert cuts == sorted(cuts) and len(cuts) == len(set(cuts))
+    if k == 1:
+        assert bounds == ((0, n),)
+    assert _bottleneck(table, bounds) \
+        <= _bottleneck(table, uniform_bounds(n, k)) + 1e-9
+
+
+@given(units=st.lists(st.integers(1, 200), min_size=2, max_size=10),
+       head=st.integers(0, 500), tail=st.integers(0, 500),
+       k=st.integers(2, 4))
+@settings(max_examples=20, deadline=None)
+def test_plan_solver_matches_brute_force(units, head, tail, k):
+    """The DP's bottleneck equals exhaustive enumeration's optimum."""
+    from repro.plan.search import brute_force_bounds, solve
+    if k > len(units):
+        return
+    table = _plan_table(units, head=head, tail=tail)
+    best, _ = brute_force_bounds(table, k)
+    got = _bottleneck(table, solve(table, k))
+    assert abs(got - best) <= 1e-9 * max(1.0, best)
+
+
+@given(k=st.integers(1, 6), seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_plan_uniform_units_reproduce_divmod_split(k, seed):
+    """Exact-tie determinism: over equal-weight units every balanced cut
+    ties, and the tie-break must reproduce the divmod hand bounds."""
+    from repro.plan.search import solve, uniform_bounds
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(max(k, 1), 25))
+    w = int(rng.randint(1, 1000))
+    table = _plan_table([w] * n)
+    assert solve(table, k if k <= n else n) \
+        == uniform_bounds(n, k if k <= n else n)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_plan_invariants_hold_for_every_arch(arch):
+    """auto_plan produces a valid PartitionPlan with a bottleneck <= the
+    uniform split's for every assigned architecture."""
+    from repro import plan as plan_lib
+    from repro.configs import get
+    from repro.models import model as M
+    from repro.plan.search import uniform_bounds
+    cfg = get(arch)
+    g = M.n_groups(cfg)
+    k = min(4, g)
+    table = plan_lib.lm_costs(cfg)
+    bounds = plan_lib.auto_bounds(table, k)
+    assert bounds[0][0] == 0 and bounds[-1][1] == g
+    assert all(hi > lo for lo, hi in bounds)
+    for (_, a1), (b0, _) in zip(bounds, bounds[1:]):
+        assert a1 == b0
+    assert _bottleneck(table, bounds) \
+        <= _bottleneck(table, uniform_bounds(g, k)) + 1e-9
 
 
 @given(seq=st.integers(1, 64), window=st.sampled_from([0, 8, 16]))
