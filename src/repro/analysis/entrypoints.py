@@ -52,16 +52,23 @@ def _mlp_targets(ctx: AnalysisContext) -> List[TraceTarget]:
     be, spec, sps, sils = _mlp_world(ctx)
     batches = be.epoch_arrays(0, shuffle=False)
     opt = make_optimizer_for(spec.stage(0), spec)
+    # the NaN/inf-guarded variant (repro.resilience): skip-and-count must
+    # stay on-device — the trace lint proves the guard adds no host callback
+    from repro.optim import step_guard
+    gopt = step_guard(make_optimizer_for(spec.stage(0), spec))
     entries = (
-        ("train/mlp_sil_epoch", be.build_sil_step(0, opt, sils[0]), sps[0]),
+        ("train/mlp_sil_epoch", be.build_sil_step(0, opt, sils[0]), sps[0],
+         opt),
         ("train/mlp_parallel_epoch", be.build_parallel_step(1, opt, sils),
-         sps[1]),
+         sps[1], opt),
+        ("train/mlp_guarded_epoch", be.build_sil_step(0, gopt, sils[0]),
+         sps[0], gopt),
     )
     return [TraceTarget(name=name, fn=scanned_epoch_fn(step),
-                        args=(p, opt.init(p), batches), donate=(0, 1),
+                        args=(p, o.init(p), batches), donate=(0, 1),
                         policy=ctx.precision, state_map=((0, 0), (1, 1)),
                         tags=("train", "mlp"))
-            for name, step, p in entries]
+            for name, step, p, o in entries]
 
 
 def _lm_train_targets(ctx: AnalysisContext) -> List[TraceTarget]:

@@ -1,1 +1,3 @@
-from .checkpoint import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from .checkpoint import (  # noqa: F401
+    CheckpointCorruptError, available_steps, latest_step, prune_checkpoints,
+    restore_checkpoint, restore_latest_valid, save_checkpoint)

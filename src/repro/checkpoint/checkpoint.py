@@ -2,19 +2,37 @@
 
 Arrays are gathered to host (sharded arrays included — restore re-shards via
 ``jax.device_put`` with the target sharding when provided).
+
+Durability contract (repro.resilience): writes are **atomic** — both the
+array archive and the manifest go through temp-file + fsync + ``os.replace``,
+and the manifest (written last) is the commit record, so a crash mid-save
+can never leave a checkpoint that *looks* complete.  Every leaf's CRC32 is
+recorded in the manifest and verified on restore; ``restore_checkpoint`` with
+``step=None`` falls back across corrupt/torn steps to the most recent
+checkpoint that actually validates (``CheckpointCorruptError`` marks the
+skipped ones).  ``keep_last=N`` bounds retention without ever deleting the
+step just written.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Optional
+import zlib
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _BF16 = jnp.bfloat16.dtype
+
+
+class CheckpointCorruptError(ValueError):
+    """A checkpoint step that exists on disk but does not validate
+    (torn write, truncated archive/manifest, checksum mismatch).  Distinct
+    from caller errors (mismatched ``like`` trees) so the fallback path
+    knows which failures an older checkpoint can cure."""
 
 
 def _flatten_with_paths(tree):
@@ -34,7 +52,36 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_checkpoint(directory: str, step: int, tree: Any, metadata=None) -> str:
+def _atomic_write(path: str, write_fn) -> None:
+    """temp-file + fsync + os.replace: the file at ``path`` is either the
+    old content or the complete new content, never a torn prefix."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    # best-effort directory fsync so the rename itself is durable
+    try:
+        dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:
+        pass
+
+
+def _npz_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.npz")
+
+
+def _manifest_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt_{step:08d}.json")
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, metadata=None,
+                    keep_last: Optional[int] = None) -> str:
     os.makedirs(directory, exist_ok=True)
     flat, _ = _flatten_with_paths(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
@@ -42,18 +89,40 @@ def save_checkpoint(directory: str, step: int, tree: Any, metadata=None) -> str:
     # and record the real dtype in the manifest
     stored = {k: (v.view(np.uint16) if v.dtype == _BF16 else v)
               for k, v in arrays.items()}
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **stored)
+    path = _npz_path(directory, step)
+    _atomic_write(path, lambda f: np.savez(f, **stored))
     manifest = {
         "step": step,
         "keys": sorted(arrays.keys()),
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        # CRC32 of the stored bytes (uint16 view for bf16) per leaf —
+        # restore verifies every leaf it reads against these
+        "checksums": {k: zlib.crc32(v.tobytes()) for k, v in stored.items()},
         "metadata": metadata or {},
     }
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    # the manifest commits the step: it is written strictly after the
+    # arrays, so a crash between the two leaves a detectable torn step
+    _atomic_write(_manifest_path(directory, step),
+                  lambda f: f.write(json.dumps(manifest, indent=1)
+                                    .encode("utf-8")))
+    if keep_last:
+        prune_checkpoints(directory, keep_last)
     return path
+
+
+def prune_checkpoints(directory: str, keep_last: int) -> List[int]:
+    """Delete all but the newest ``keep_last`` steps; returns the pruned
+    step numbers."""
+    steps = available_steps(directory)
+    drop = steps[:-keep_last] if keep_last > 0 else []
+    for s in drop:
+        for p in (_npz_path(directory, s), _manifest_path(directory, s)):
+            try:
+                os.remove(p)
+            except FileNotFoundError:
+                pass
+    return drop
 
 
 def _leaf_placements(flat_like, shardings):
@@ -76,32 +145,59 @@ def _leaf_placements(flat_like, shardings):
     return flat_shard
 
 
-def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
-                       shardings: Any = None) -> Any:
-    step = latest_step(directory) if step is None else step
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints in {directory}")
-    z = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
-    manifest_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+def _load_step(directory: str, like: Any, step: int, shardings: Any) -> Any:
+    """Restore one specific step, validating archive + manifest + per-leaf
+    checksums.  Raises ``CheckpointCorruptError`` for anything an older
+    checkpoint could cure, plain ``ValueError`` for caller errors."""
+    npz_path = _npz_path(directory, step)
+    manifest_path = _manifest_path(directory, step)
     try:
         with open(manifest_path) as f:
             manifest = json.load(f)
+    except FileNotFoundError:
+        raise CheckpointCorruptError(
+            f"missing manifest {manifest_path} (crash mid-save: arrays "
+            "written, step never committed)") from None
     except json.JSONDecodeError as e:
-        raise ValueError(f"corrupt/truncated manifest {manifest_path}: {e}"
-                         ) from None
+        raise CheckpointCorruptError(
+            f"corrupt/truncated manifest {manifest_path}: {e}") from None
+    try:
+        z = np.load(npz_path)
+        files = set(z.files)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"corrupt/truncated checkpoint archive {npz_path}: {e}"
+        ) from None
     flat_like, treedef = _flatten_with_paths(like)
-    missing = [k for k in flat_like if k not in z.files]
+    saved_keys = set(manifest.get("keys", ()))
+    torn = [k for k in flat_like if k in saved_keys and k not in files]
+    if torn:
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} in {directory} archive lacks arrays "
+            f"the manifest committed: {torn[:3]}")
+    missing = [k for k in flat_like if k not in files]
     if missing:
         raise ValueError(
             f"checkpoint step {step} in {directory} lacks arrays for "
             f"{missing[:3]}{'...' if len(missing) > 3 else ''} "
             f"(restore `like` tree does not match the saved tree)")
+    checksums = manifest.get("checksums")  # absent in pre-resilience ckpts
     leaves = []
     flat_shard = None
     if shardings is not None:
         flat_shard = _leaf_placements(flat_like, shardings)
     for key in flat_like:
-        arr = z[key]
+        try:
+            arr = z[key]
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"corrupt array {key!r} in {npz_path}: {e}") from None
+        if checksums is not None and key in checksums:
+            crc = zlib.crc32(arr.tobytes())
+            if crc != checksums[key]:
+                raise CheckpointCorruptError(
+                    f"checksum mismatch for {key!r} in {npz_path}: "
+                    f"stored {checksums[key]}, read {crc}")
         if manifest["dtypes"].get(key) == "bfloat16":
             # undo the uint16 storage view BEFORE placement so the device
             # buffer carries the real dtype
@@ -114,9 +210,46 @@ def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
                                         [leaves[i] for i in range(len(leaves))])
 
 
-def latest_step(directory: str) -> Optional[int]:
+def restore_latest_valid(directory: str, like: Any,
+                         shardings: Any = None) -> Tuple[Any, int]:
+    """``(tree, step)`` from the most recent step that VALIDATES — torn or
+    corrupt steps are skipped (newest-first) until one loads cleanly.  The
+    newest step's corruption error is re-raised when nothing validates."""
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    errors: List[CheckpointCorruptError] = []
+    for step in reversed(steps):
+        try:
+            return _load_step(directory, like, step, shardings), step
+        except CheckpointCorruptError as e:
+            errors.append(e)
+    tail = f" ({len(errors) - 1} older step(s) also invalid)" \
+        if len(errors) > 1 else ""
+    raise CheckpointCorruptError(str(errors[0]) + tail) from None
+
+
+def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> Any:
+    """Restore ``like``-shaped tree.  ``step=None`` takes the most recent
+    *valid* step (falling back across corrupt ones); an explicit ``step``
+    is pinned — corruption there raises instead of silently substituting
+    different training state."""
+    if step is None:
+        tree, _ = restore_latest_valid(directory, like, shardings)
+        return tree
+    return _load_step(directory, like, int(step), shardings)
+
+
+def available_steps(directory: str) -> List[int]:
+    """All step numbers with an array archive on disk, ascending (validity
+    is judged at restore time)."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(directory)
+                  if (m := re.match(r"ckpt_(\d+)\.npz$", f)))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None

@@ -43,7 +43,8 @@ class StageExecutor:
     def __init__(self, backend, placement: PlacementPlan,
                  stage_params: Sequence, sils: Sequence, opts: Sequence,
                  hps: Sequence, *, seed_base: int = 0, shuffle: bool = True,
-                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0):
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 ckpt_keep_last: Optional[int] = None):
         placement.validate(backend.n_stages)
         self.be = backend
         self.placement = placement
@@ -53,6 +54,12 @@ class StageExecutor:
         self.shuffle = shuffle
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = int(ckpt_every or 0)
+        self.ckpt_keep_last = ckpt_keep_last
+        # fault-injection seam (repro.resilience): when set, every stage's
+        # input batch passes through ``batch_hook(stage, tick, batch)``
+        # before dispatch.  Deterministic data access by (stage, tick) is
+        # what makes an injected fault — and its replay — reproducible
+        self.batch_hook = None
         n = self.n = backend.n_stages
         self.devices = [placement.device_for(k) for k in range(n)]
         # pin per-stage state to its device ONCE; everything downstream
@@ -118,7 +125,9 @@ class StageExecutor:
         batches = be.epoch_arrays(self.seed_base + ep, self.shuffle)
         n_samples = batches[0].shape[0] * batches[0].shape[1]
         for k in ks:
-            bk = jax.device_put(batches, self.devices[k])
+            bk = batches if self.batch_hook is None \
+                else self.batch_hook(k, ep, batches)
+            bk = jax.device_put(bk, self.devices[k])
             self.params[k], self.opt_states[k], _ = self._fns[k](
                 self.params[k], self.opt_states[k], bk)
             if ep >= self._metrics_upto[k]:
@@ -131,12 +140,14 @@ class StageExecutor:
         batch = be.batch_fn(i)
         for k in ks:
             dev = self.devices[k]
+            bk = batch if self.batch_hook is None \
+                else self.batch_hook(k, i, batch)
             if k == 0:
-                b0 = jax.device_put(batch, dev)
+                b0 = jax.device_put(bk, dev)
                 self.params[0], self.opt_states[0], loss = self._fns[0](
                     self.params[0], self.opt_states[0], b0, b0["labels"])
             else:
-                labels = jax.device_put(batch["labels"], dev)
+                labels = jax.device_put(bk["labels"], dev)
                 self.params[k], self.opt_states[k], loss = self._fns[k](
                     self.params[k], self.opt_states[k], labels)
             if i >= self._metrics_upto[k]:
@@ -172,7 +183,8 @@ class StageExecutor:
                 self.opt_states[k],
                 metadata={"device": str(self.devices[k]),
                           "placement": self.placement.strategy,
-                          "kind": self.be.kind})
+                          "kind": self.be.kind},
+                keep_last=self.ckpt_keep_last)
 
     def resume_stage(self, k: int, step: Optional[int] = None) -> int:
         """Reload stage k (params + optimizer state + tick counter) from its
@@ -211,3 +223,7 @@ class StageExecutor:
                                  phase_name, self._logged_stages)
             self._pending, self._logged_steps, self._logged_stages = \
                 [], [], []
+        # NaN/inf-guard telemetry: one host read per stage, at the single
+        # blocking point the executor already has
+        for k in range(self.n):
+            trainer.note_skipped(state, self.opt_states[k], phase_name, k)

@@ -23,7 +23,8 @@ from __future__ import annotations
 import os
 from typing import Any, Callable, List, Optional, Sequence
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              restore_latest_valid, save_checkpoint)
 
 
 def stage_dir(root: str, k: int) -> str:
@@ -31,16 +32,19 @@ def stage_dir(root: str, k: int) -> str:
 
 
 def save_stage(root: str, k: int, tick: int, stage_params,
-               opt_state=None, metadata: Optional[dict] = None) -> str:
+               opt_state=None, metadata: Optional[dict] = None,
+               keep_last: Optional[int] = None) -> str:
     """Checkpoint one stage: params (+ optimizer state) under the stage's
-    own directory, at the stage's own tick counter."""
+    own directory, at the stage's own tick counter.  ``keep_last=N``
+    retains only the N newest ticks of this stage."""
     tree = {"params": stage_params}
     if opt_state is not None:
         tree["opt"] = opt_state
     meta = dict(metadata or {})
     meta.setdefault("stage", k)
     meta.setdefault("tick", int(tick))
-    return save_checkpoint(stage_dir(root, k), int(tick), tree, metadata=meta)
+    return save_checkpoint(stage_dir(root, k), int(tick), tree,
+                           metadata=meta, keep_last=keep_last)
 
 
 def restore_stage(root: str, k: int, like_params, like_opt=None, *,
@@ -50,14 +54,25 @@ def restore_stage(root: str, k: int, like_params, like_opt=None, *,
     ``like_*`` supply tree structure only (live trees, or
     ``jax.ShapeDtypeStruct`` stand-ins).  ``device`` commits every restored
     leaf to that single device (the executor's pinning contract); None
-    returns host arrays."""
+    returns host arrays.
+
+    With ``step=None`` the restore takes the newest tick that VALIDATES —
+    a torn or corrupt latest checkpoint (the crash that forced this resume
+    may have interrupted a save) falls back to the previous valid one, and
+    the returned tick tells the executor how far to replay.  An explicit
+    ``step`` stays pinned: corruption there raises."""
     d = stage_dir(root, k)
-    tick = latest_step(d) if step is None else int(step)
-    if tick is None:
-        raise FileNotFoundError(f"no checkpoints for stage {k} under {root}")
     like = {"params": like_params}
     if like_opt is not None:
         like["opt"] = like_opt
+    if step is None:
+        try:
+            tree, tick = restore_latest_valid(d, like, shardings=device)
+        except FileNotFoundError:
+            raise FileNotFoundError(
+                f"no checkpoints for stage {k} under {root}") from None
+        return tree["params"], tree.get("opt"), tick
+    tick = int(step)
     tree = restore_checkpoint(d, like, step=tick, shardings=device)
     return tree["params"], tree.get("opt"), tick
 

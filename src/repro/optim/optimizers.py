@@ -174,7 +174,8 @@ def mixed_precision(inner: Optimizer, *, loss_scale: float = 1.0,
 
     def init(params):
         state = {"loss_scale": jnp.float32(loss_scale),
-                 "good_steps": jnp.zeros((), jnp.int32)}
+                 "good_steps": jnp.zeros((), jnp.int32),
+                 "skipped": jnp.zeros((), jnp.int32)}
         if needs_master(params):
             state["master"] = _tree_map(
                 lambda p: p.astype(jnp.float32)
@@ -207,7 +208,9 @@ def mixed_precision(inner: Optimizer, *, loss_scale: float = 1.0,
         else:
             new_scale, good = scale, state["good_steps"]
         new_state = {"inner": new_inner, "loss_scale": new_scale,
-                     "good_steps": good}
+                     "good_steps": good,
+                     "skipped": state.get("skipped", jnp.int32(0))
+                     + jnp.where(finite, 0, 1).astype(jnp.int32)}
         if "master" in state:
             new_state["master"] = new_master
             new_params = _tree_map(lambda m, p: m.astype(p.dtype),
@@ -217,6 +220,57 @@ def mixed_precision(inner: Optimizer, *, loss_scale: float = 1.0,
         return new_params, new_state
 
     return Optimizer(init, update, f"mp({inner.name})")
+
+
+def step_guard(inner: Optimizer) -> Optimizer:
+    """NaN/inf step guard for precisions with no loss-scaling wrapper
+    (fp32, bf16 — repro.resilience).
+
+    A step whose gradients contain inf/nan leaves params AND inner optimizer
+    state untouched and increments a device-resident ``skipped`` counter —
+    the exact skip-and-count semantics ``mixed_precision(dynamic=True)``
+    already gives fp16, generalized to unscaled precisions.  Everything is
+    ``jnp.where`` selects inside the jitted step: no host sync, no control
+    flow divergence, scan-compatible.  Never stack this *outside*
+    ``mixed_precision`` — it would see scaled gradients and veto steps the
+    dynamic scale is supposed to cure by halving; ``mixed_precision`` counts
+    its own skips into the same ``skipped`` key instead
+    (``precision.read_skipped`` reads either wrapper's counter).
+
+    On clean steps the selects are on an always-true predicate, so the
+    wrapper is bit-exact with the inner optimizer.
+    """
+
+    def init(params):
+        return {"inner": inner.init(params),
+                "skipped": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        finite = _finite_tree(grads)
+        # inner update always runs (jit-safe); zeroed grads keep its math
+        # finite, the selects below discard the whole step when not finite
+        g_safe = _tree_map(lambda g: jnp.where(finite, g, jnp.zeros_like(g)),
+                           grads)
+        new_params, new_inner = inner.update(g_safe, state["inner"], params)
+        new_params = _tree_map(lambda n, o: jnp.where(finite, n, o),
+                               new_params, params)
+        new_inner = _tree_map(lambda n, o: jnp.where(finite, n, o),
+                              new_inner, state["inner"])
+        return new_params, {
+            "inner": new_inner,
+            "skipped": state["skipped"]
+            + jnp.where(finite, 0, 1).astype(jnp.int32)}
+
+    return Optimizer(init, update, f"guard({inner.name})")
+
+
+def read_skipped(opt_state):
+    """Device-resident skipped-step counter from a ``step_guard`` or
+    ``mixed_precision`` state, or ``None`` when the optimizer is unguarded.
+    Host-transferring the result is the caller's (end-of-phase) decision."""
+    if isinstance(opt_state, dict) and "skipped" in opt_state:
+        return opt_state["skipped"]
+    return None
 
 
 def make_optimizer(name: str, lr, **kw) -> Optimizer:

@@ -1,0 +1,5 @@
+from .faults import (  # noqa: F401
+    CheckpointCorruption, FakeClock, Fault, FaultSchedule, NaNInjection,
+    StageCrash, StragglerDelay, TransientError)
+from .supervisor import (  # noqa: F401
+    RetryPolicy, StageHealth, SupervisedExecutor, UnrecoveredFaultError)

@@ -43,6 +43,11 @@ class Request:
     frames: Any = None
     image_embeds: Any = None
     id: Optional[str] = None
+    # total latency budget in milliseconds, measured from submission: the
+    # engine rejects the request (finish_reason "rejected", partial tokens
+    # kept) once the budget elapses — queued OR mid-decode.  None = no
+    # deadline (the pre-resilience behavior)
+    deadline_ms: Optional[float] = None
 
 
 @dataclass(frozen=True)
@@ -51,7 +56,10 @@ class Completion:
     id: Optional[str]
     prompt_tokens: Tuple[int, ...]
     tokens: Tuple[int, ...]          # generated tokens (eos included if hit)
-    finish_reason: str               # "eos" | "length"
+    # "eos" | "length" | "rejected" — "rejected" marks load shedding (queue
+    # timeout, missed deadline, or cache-pressure admission control); its
+    # tokens are whatever was emitted before the cut, possibly none
+    finish_reason: str
 
     @property
     def n_prompt(self) -> int:

@@ -29,7 +29,7 @@ with adversarially varied prompt lengths should quantize lengths upstream.
 """
 from __future__ import annotations
 
-from collections import deque
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -50,11 +50,23 @@ class Engine:
 
     def __init__(self, cfg, params=None, *, key=None, max_slots: int = 4,
                  decode_block: int = 16, plan=None, stage_params=None,
-                 policy=None, precision=None):
+                 policy=None, precision=None,
+                 max_queue_wait_ms: Optional[float] = None,
+                 max_cache_tokens: Optional[int] = None, clock=None):
         """precision: optional repro.precision preset name or PrecisionPolicy
         — re-dtypes the serving compute path (activations + the slot cache
         pool run in the policy's compute dtype; params keep their storage
-        dtype; sampling always sees fp32 logits)."""
+        dtype; sampling always sees fp32 logits).
+
+        Degradation knobs (repro.resilience; all default OFF, preserving
+        exact legacy behavior):
+        max_queue_wait_ms — a request still queued after this long is
+        rejected instead of waiting forever behind a stalled batch.
+        max_cache_tokens — admission control under cache pressure: a request
+        whose prompt+generation span exceeds this never enters the queue
+        (rejected up front), and the grow-only pool is capped at it.
+        clock — injectable ``time.monotonic`` substitute (deterministic
+        deadline tests; see ``resilience.FakeClock``)."""
         if precision is not None:
             from repro.precision import get_policy
             cfg = get_policy(precision).apply_to_model(cfg)
@@ -93,6 +105,13 @@ class Engine:
         # introspection (REPRO_ASSUME_DONATION=1) sees the real masks
         self._donate = runtime.donation_enabled()
         self.scheduler: Optional[Scheduler] = None  # last generate()'s
+        self.max_queue_wait_ms = max_queue_wait_ms
+        self.max_cache_tokens = max_cache_tokens
+        self._clock = clock or time.monotonic
+        # degraded-mode telemetry, cumulative across generate() calls
+        self.stats: Dict[str, int] = {"rejected_cache": 0,
+                                      "rejected_queue": 0,
+                                      "rejected_deadline": 0}
 
     # -- forward fns (plain vs staged) --------------------------------------
 
@@ -204,6 +223,10 @@ class Engine:
         """The engine's single cache pool, grow-only and bucketed to 32
         tokens, so serving varied request lengths reuses one device cache
         instead of allocating per distinct length."""
+        if self.max_cache_tokens is not None:
+            # admission control already rejected anything that needs more —
+            # the grow-only pool must never outgrow the configured budget
+            need_len = min(need_len, self.max_cache_tokens)
         if self._pool is None or self._pool.cache_len < need_len:
             size = -(-need_len // 32) * 32
             self._pool = CachePool(self.cfg, self.max_slots, size,
@@ -230,12 +253,43 @@ class Engine:
         if not requests:
             return []
         n_slots = self.max_slots
+        extra = self.cfg.vision_tokens if self.cfg.frontend == "vision" else 0
+
+        def span(r) -> int:
+            return np.asarray(r.tokens).reshape(-1).shape[0] \
+                + r.gen.max_new_tokens + extra
+
+        def completion(r, tokens, reason) -> Completion:
+            return Completion(
+                id=r.id,
+                prompt_tokens=tuple(int(t) for t in
+                                    np.asarray(r.tokens).reshape(-1)),
+                tokens=tokens, finish_reason=reason)
+
+        sched = self.scheduler = Scheduler(
+            n_slots, max_queue_wait_ms=self.max_queue_wait_ms)
+        done: Dict[int, Completion] = {}
+        accepted: List[Request] = []
+        now0 = self._clock()
+        for i, r in enumerate(requests):
+            if self.max_cache_tokens is not None \
+                    and span(r) > self.max_cache_tokens:
+                # cache-pressure admission control: this request could never
+                # fit a slot of the capped pool — shed it up front, loudly
+                done[i] = completion(r, (), "rejected")
+                self.stats["rejected_cache"] += 1
+            elif r.gen.max_new_tokens <= 0:    # prefill-only: nothing to emit
+                done[i] = completion(r, (), "length")
+            else:
+                sched.submit(i, r, now0)
+                accepted.append(r)
+        if not accepted:
+            return [done[i] for i in range(len(requests))]
         # pools are reusable without zeroing: admission fully overwrites a
         # slot before it decodes, and free slots never reach a Completion
         pool = self._pool_for(max(cache_len or 0,
-                                  self._cache_len_for(requests)))
+                                  self._cache_len_for(accepted)))
         cache_len = pool.cache_len
-        sched = self.scheduler = Scheduler(n_slots)
 
         tok = jnp.zeros((n_slots,), jnp.int32)
         pos = jnp.zeros((n_slots,), jnp.int32)
@@ -244,37 +298,40 @@ class Engine:
         tks = jnp.zeros((n_slots,), jnp.int32)
         tps = jnp.ones((n_slots,), jnp.float32)
 
-        queue = deque()
-        done: Dict[int, Completion] = {}
-        for i, r in enumerate(requests):
-            if r.gen.max_new_tokens <= 0:      # prefill-only: nothing to emit
-                done[i] = Completion(
-                    id=r.id,
-                    prompt_tokens=tuple(int(t) for t in
-                                        np.asarray(r.tokens).reshape(-1)),
-                    tokens=(), finish_reason="length")
-            else:
-                queue.append((i, r))
         mode = sampling.mode_for([r.gen for r in requests])
+        # degradation is active only when some limit can actually fire —
+        # otherwise shed() stays a no-op and the loop is the legacy loop
+        shedding = self.max_queue_wait_ms is not None or any(
+            r.deadline_ms is not None for r in accepted)
 
         def finish(slot: int, reason: str) -> None:
             st = sched.retire(slot)
             st.finish_reason = reason
-            r = st.request
-            done[st.req_idx] = Completion(
-                id=r.id,
-                prompt_tokens=tuple(int(t) for t in
-                                    np.asarray(r.tokens).reshape(-1)),
-                tokens=tuple(st.emitted), finish_reason=reason)
+            done[st.req_idx] = completion(st.request, tuple(st.emitted),
+                                          reason)
+
+        def shed() -> None:
+            """Degraded mode: reject what can no longer be served in time —
+            queued requests past their wait budget, active slots past their
+            deadline (partial tokens kept) — instead of stalling everyone."""
+            if not shedding:
+                return
+            now = self._clock()
+            for req_idx, r in sched.expire_queued(now):
+                done[req_idx] = completion(r, (), "rejected")
+                self.stats["rejected_queue"] += 1
+            for slot in sched.overdue_active(now):
+                finish(slot, "rejected")
+                self.stats["rejected_deadline"] += 1
 
         def admit_group(items) -> None:
             """Admit same-prompt-length requests via ONE jitted batched
             prefill+sample+scatter call."""
             nonlocal tok, pos, keys, temps, tks, tps
-            reqs = [r for _, r in items]
+            reqs = [r for _, r, _ in items]
             batch = self._request_batch(reqs)
-            slots = [sched.admit(i, r, batch["tokens"].shape[1])
-                     for i, r in items]
+            slots = [sched.admit(i, r, batch["tokens"].shape[1], arrival=t)
+                     for i, r, t in items]
             step = self._admit_step(batch["tokens"].shape, cache_len, mode)
             pool.cache, tok, pos, keys, temps, tks, tps, t0 = step(
                 self.params, batch, pool.cache, tok, pos, keys, temps, tks,
@@ -284,7 +341,7 @@ class Engine:
                 jnp.asarray([r.gen.top_k for r in reqs], jnp.int32),
                 jnp.asarray([r.gen.top_p for r in reqs], jnp.float32))
             t0h = np.asarray(t0)
-            for row, (slot, (i, r)) in enumerate(zip(slots, items)):
+            for row, (slot, (i, r, _)) in enumerate(zip(slots, items)):
                 g = r.gen
                 sched.active[slot].emitted.append(int(t0h[row]))
                 if g.eos_id is not None and int(t0h[row]) == g.eos_id:
@@ -293,16 +350,16 @@ class Engine:
                     finish(slot, "length")
 
         def admit_ready() -> None:
-            while queue and sched.free:
-                take = [queue.popleft()
-                        for _ in range(min(len(queue), len(sched.free)))]
+            while sched.queued() and sched.free:
+                take = sched.take(len(sched.free))
                 groups: Dict[int, list] = {}
-                for i, r in take:
+                for i, r, t in take:
                     plen = np.asarray(r.tokens).reshape(-1).shape[0]
-                    groups.setdefault(plen, []).append((i, r))
+                    groups.setdefault(plen, []).append((i, r, t))
                 for items in groups.values():
                     admit_group(items)
 
+        shed()
         admit_ready()
         while sched.active:
             n = self._chunk_len(sched.min_remaining())
@@ -321,5 +378,6 @@ class Engine:
                     if st.remaining <= 0:
                         finish(slot, "length")
                         break
+            shed()
             admit_ready()
         return [done[i] for i in range(len(requests))]

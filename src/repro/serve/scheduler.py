@@ -5,11 +5,20 @@ Slots move free -> active on ``admit`` and back on ``retire``; every
 transition is audited (``events``) and checked (``_check``) so a leaked or
 double-booked slot fails loudly instead of silently serving two requests
 from one cache row.
+
+The scheduler also owns the wait queue (repro.resilience): requests enter
+via ``submit`` stamped with their submission time, and ``expire_queued`` /
+``overdue_active`` implement graceful degradation — a request that has
+outwaited ``max_queue_wait_ms`` or its own ``deadline_ms`` is REJECTED
+(audited ``("reject", req_idx)`` event) instead of leaking in a stalled
+engine.  With no deadlines configured the queue is plain FIFO and the
+event stream is exactly the legacy admit/retire sequence.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 
 @dataclass
@@ -20,6 +29,7 @@ class SlotState:
     n_prompt: int
     emitted: List[int] = field(default_factory=list)
     finish_reason: Optional[str] = None
+    arrival: float = 0.0             # submission time (deadline epoch)
 
     @property
     def remaining(self) -> int:
@@ -27,21 +37,74 @@ class SlotState:
 
 
 class Scheduler:
-    """Admit requests into free cache slots; retire on EOS / length."""
+    """Admit requests into free cache slots; retire on EOS / length;
+    reject on queue timeout / missed deadline."""
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, *,
+                 max_queue_wait_ms: Optional[float] = None):
         self.n_slots = n_slots
+        self.max_queue_wait_ms = max_queue_wait_ms
         self.free: List[int] = list(range(n_slots))
         self.active: Dict[int, SlotState] = {}
+        self.queue: Deque[Tuple[int, Any, float]] = deque()
         self.events: List[Tuple[str, int]] = []
         self.max_concurrent = 0
 
-    def admit(self, req_idx: int, request, n_prompt: int) -> int:
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, req_idx: int, request, now: float = 0.0) -> None:
+        """Enqueue a request, stamped with its submission time — the epoch
+        both the queue-wait limit and the request's own deadline count
+        from."""
+        self.queue.append((req_idx, request, now))
+
+    def queued(self) -> int:
+        return len(self.queue)
+
+    def take(self, n: int) -> List[Tuple[int, Any, float]]:
+        """Pop up to ``n`` queued entries in arrival order."""
+        out: List[Tuple[int, Any, float]] = []
+        while self.queue and len(out) < n:
+            out.append(self.queue.popleft())
+        return out
+
+    def expire_queued(self, now: float) -> List[Tuple[int, Any]]:
+        """Drop every queued request that has outwaited the queue limit or
+        its own ``deadline_ms``; returns the rejected (req_idx, request)
+        pairs (audited, in arrival order)."""
+        kept: Deque[Tuple[int, Any, float]] = deque()
+        rejected: List[Tuple[int, Any]] = []
+        for req_idx, request, t in self.queue:
+            waited_ms = (now - t) * 1000.0
+            deadline = getattr(request, "deadline_ms", None)
+            if (self.max_queue_wait_ms is not None
+                    and waited_ms > self.max_queue_wait_ms) \
+                    or (deadline is not None and waited_ms > deadline):
+                rejected.append((req_idx, request))
+                self.events.append(("reject", req_idx))
+            else:
+                kept.append((req_idx, request, t))
+        self.queue = kept
+        return rejected
+
+    def overdue_active(self, now: float) -> List[int]:
+        """Slots whose request blew its ``deadline_ms`` mid-decode — the
+        engine sheds these (retire with "rejected", partial tokens kept)
+        so one slow request can't hold a cache slot forever."""
+        return [slot for slot, st in self.active.items()
+                if getattr(st.request, "deadline_ms", None) is not None
+                and (now - st.arrival) * 1000.0 > st.request.deadline_ms]
+
+    # -- slots -------------------------------------------------------------
+
+    def admit(self, req_idx: int, request, n_prompt: int,
+              arrival: float = 0.0) -> int:
         if not self.free:
             raise RuntimeError("admit() with no free slot")
         slot = self.free.pop(0)
         assert slot not in self.active, f"slot {slot} double-booked"
-        self.active[slot] = SlotState(req_idx, request, n_prompt)
+        self.active[slot] = SlotState(req_idx, request, n_prompt,
+                                      arrival=arrival)
         self.events.append(("admit", slot))
         self.max_concurrent = max(self.max_concurrent, len(self.active))
         self._check()

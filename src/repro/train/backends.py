@@ -31,7 +31,7 @@ from repro import runtime
 from repro.core import losses, partition, sil as sil_lib
 from repro.models import mlp as MLP
 from repro.models import model as M
-from repro.optim import make_optimizer, mixed_precision
+from repro.optim import make_optimizer, mixed_precision, step_guard
 
 from repro.train.spec import StageSpec, TrainSpec
 
@@ -67,6 +67,16 @@ def make_optimizer_for(hp: StageSpec, spec: Optional[TrainSpec] = None):
         opt = mixed_precision(opt, loss_scale=pol.loss_scale,
                               dynamic=pol.dynamic_scale,
                               growth_interval=pol.scale_growth_interval)
+    else:
+        # NaN/inf step guard (repro.resilience) for the unscaled precisions
+        # only: mixed_precision already skips-and-counts non-finite steps,
+        # and a guard stacked OUTSIDE it would veto scaled gradients before
+        # the dynamic loss scale could cure them by halving
+        guard = hp.nan_guard
+        if guard is None:
+            guard = bool(getattr(spec, "nan_guard", False))
+        if guard:
+            opt = step_guard(opt)
     return opt
 
 

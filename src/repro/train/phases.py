@@ -71,6 +71,7 @@ class PhaseBase:
     momentum: Optional[float] = None
     accum: Optional[int] = None
     precision: Optional[object] = None
+    nan_guard: Optional[bool] = None
     seed_base: int = 0
     needs_sil = False
 
@@ -84,7 +85,9 @@ class PhaseBase:
             else base.momentum,
             accum=self.accum if self.accum is not None else base.accum,
             precision=self.precision if self.precision is not None
-            else base.precision)
+            else base.precision,
+            nan_guard=self.nan_guard if self.nan_guard is not None
+            else base.nan_guard)
 
 
 # ==========================================================================
@@ -433,6 +436,7 @@ class ParallelSilPhase(PhaseBase):
     devices: Optional[Sequence] = None
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
+    ckpt_keep_last: Optional[int] = None
 
     def run(self, trainer, state) -> None:
         be = trainer.backend
@@ -463,7 +467,8 @@ class ParallelSilPhase(PhaseBase):
         ex = StageExecutor(be, placement, state.stage_params, state.sils,
                            opts, hps, seed_base=self.seed_base,
                            shuffle=self.shuffle, ckpt_dir=self.ckpt_dir,
-                           ckpt_every=self.ckpt_every)
+                           ckpt_every=self.ckpt_every,
+                           ckpt_keep_last=self.ckpt_keep_last)
         if be.kind == "mlp":
             n_ticks = max(hp.epochs for hp in hps)
         else:

@@ -37,6 +37,11 @@ class StageSpec:
     # backend-wide choice taken from TrainSpec.precision (one backend traces
     # one model dtype); None inherits that spec-wide policy
     precision: Optional[object] = None
+    # NaN/inf step guard override for this stage (repro.resilience): None
+    # inherits TrainSpec.nan_guard.  Irrelevant for stages whose precision
+    # policy already wraps the optimizer in loss scaling (fp16) — that
+    # wrapper skips-and-counts non-finite steps on its own
+    nan_guard: Optional[bool] = None
 
 
 @dataclass(frozen=True)
@@ -60,6 +65,15 @@ class TrainSpec:
     # spec-wide precision policy (preset name or PrecisionPolicy); None keeps
     # the legacy behavior: MLP backend fp32, LM backend the config's dtype
     precision: Optional[object] = None
+    # ---- resilience (repro.resilience) -----------------------------------
+    # wrap every stage optimizer in optim.step_guard: a step whose grads
+    # contain inf/nan is skipped in-device (params + optimizer state kept,
+    # counter bumped) instead of silently poisoning the run.  fp16 stages
+    # keep their mixed_precision skip — the guard never stacks on top of it
+    nan_guard: bool = False
+    # abort the run (SkippedStepBudgetExceeded) once the total number of
+    # guard-skipped steps across a phase exceeds this; None = never abort
+    max_skipped_steps: Optional[int] = None
 
     def stage(self, k: int) -> StageSpec:
         if self.stages and k < len(self.stages):

@@ -23,8 +23,16 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.optim import read_skipped
 from repro.train.backends import scanned_epoch_fn
 from repro.train.history import History
+
+
+class SkippedStepBudgetExceeded(RuntimeError):
+    """More optimizer steps were NaN/inf-skipped than
+    ``TrainSpec.max_skipped_steps`` allows — the run is diverging, not
+    hiccuping, so it aborts loudly instead of burning compute on a
+    params-frozen loop."""
 
 
 @dataclass
@@ -35,6 +43,7 @@ class TrainState:
     boundary: Dict[str, Any] = field(default_factory=dict)
     cum_macs: int = 0
     step_idx: int = 0          # global LM optimizer-step counter (batch_fn arg)
+    skipped_steps: int = 0     # NaN/inf-guarded steps skipped (all stages)
 
 
 class Trainer:
@@ -111,6 +120,7 @@ class Trainer:
                 state.history.log(phase=phase_name, stage=stage,
                                   step=state.step_idx, macs=state.cum_macs,
                                   acc=eval_fn(train_params))
+        self.note_skipped(state, opt_state, phase_name, stage)
         return train_params, opt_state
 
     def drive_steps(self, state: TrainState, *, step, inputs_fn,
@@ -128,7 +138,36 @@ class Trainer:
             if advance_global:
                 state.step_idx += 1
         self.flush_losses(state, pending, steps_logged, phase_name, stage)
+        self.note_skipped(state, opt_state, phase_name, stage)
         return train_params, opt_state
+
+    def note_skipped(self, state: TrainState, opt_state, phase_name,
+                     stage) -> None:
+        """End-of-phase skipped-step telemetry (repro.resilience).
+
+        The NaN/inf guard counts skips in a device-resident int32 inside the
+        jitted step; this is the single sanctioned host read of it, at phase
+        granularity — the hot loop never syncs.  Raises
+        ``SkippedStepBudgetExceeded`` past ``spec.max_skipped_steps``."""
+        counter = read_skipped(opt_state)
+        if counter is None:
+            return
+        skipped = int(jax.device_get(counter))  # repro: allow-host-sync
+        if not skipped:
+            return
+        per_phase = state.history.meta.setdefault("skipped_steps", {})
+        key = f"{phase_name}[{stage}]"
+        # counters are cumulative per opt_state; record the high-water mark
+        # so replayed/repeated reads of the same state don't double-count
+        per_phase[key] = max(per_phase.get(key, 0), skipped)
+        state.skipped_steps = sum(per_phase.values())
+        budget = getattr(self.spec, "max_skipped_steps", None)
+        if budget is not None and state.skipped_steps > budget:
+            raise SkippedStepBudgetExceeded(
+                f"{state.skipped_steps} non-finite optimizer steps skipped "
+                f"(> budget {budget}) by phase {phase_name!r} stage {stage}: "
+                "the run is diverging — lower the lr, raise the loss scale, "
+                "or raise TrainSpec.max_skipped_steps")
 
     def flush_losses(self, state: TrainState, pending: list,
                      steps_logged: list, phase_name, stage) -> None:

@@ -288,6 +288,104 @@ def _resume_vs_uninterrupted(ctx: Context):
 
 
 # ==========================================================================
+# resilience: faults injected, recovered, and provably invisible
+# ==========================================================================
+
+@register("resilience/crash_equivalence",
+          "Training under an injected fault schedule (crash, transient, "
+          "checkpoint corruption, straggler) self-heals and finishes "
+          "bitwise-equal to the fault-free run",
+          Bitwise(), tags=("resilience", "dist", "checkpoint", "train"))
+def _crash_equivalence(ctx: Context):
+    from repro.dist import StageExecutor, placement
+    from repro.models import mlp as MLP
+    from repro.resilience import (CheckpointCorruption, FakeClock,
+                                  FaultSchedule, RetryPolicy, StageCrash,
+                                  StragglerDelay, SupervisedExecutor,
+                                  TransientError)
+    from repro.train import MLPBackend
+    from repro.train.backends import balanced_bounds, make_optimizer_for
+    n_ticks = 4 if ctx.preset == "tiny" else 6
+    cfg, data, spec = scenarios.tiny_mlp(n_stages=2,
+                                         epochs=(n_ticks,) * 2,
+                                         n_train=512, batch_size=128)
+    be = MLPBackend(cfg, data, spec, bounds=balanced_bounds(cfg, 2))
+    params = MLP.init_params(cfg, jax.random.PRNGKey(0))
+    sils = be.make_sils(jax.random.PRNGKey(3), spec.kappa)
+    sp0 = be.split(params)
+    hps = [spec.stage(k) for k in range(2)]
+    pl = placement.round_robin(2)
+
+    def make_ex(root):
+        opts = [make_optimizer_for(hp, spec) for hp in hps]
+        return StageExecutor(be, pl, sp0, sils, opts, hps, shuffle=True,
+                             ckpt_dir=root)
+
+    ref_ex = make_ex(os.path.join(ctx.workdir, "ref"))
+    ref_ex.run(n_ticks)
+    ref = ref_ex.gather()
+
+    # one of each recoverable fault kind, at fixed coordinates so the run
+    # is replayable without even a seed
+    schedule = FaultSchedule(faults=[
+        TransientError(stage=0, tick=1, failures=2),
+        StageCrash(stage=1, tick=2),
+        StragglerDelay(stage=1, tick=3, delay=0.7),
+        CheckpointCorruption(stage=0, tick=3, mode="truncate_manifest"),
+    ])
+    clk = FakeClock()
+    ex = make_ex(os.path.join(ctx.workdir, "chaos"))
+    sup = SupervisedExecutor(ex, schedule=schedule, clock=clk.monotonic,
+                             sleep=clk.sleep, ckpt_every=1,
+                             policy=RetryPolicy(max_retries=4), strict=True)
+    sup.run(n_ticks)
+    assert not sup.unrecovered, sup.report()
+    assert len(sup.faults_seen) >= 4, sup.report()
+    return ref, ex.gather()
+
+
+@register("resilience/nan_skip",
+          "A NaN/inf-poisoned batch under the step guard == the same run "
+          "with the poisoned batch excised, bitwise (skip leaves params "
+          "and optimizer state untouched)",
+          Bitwise(), tags=("resilience", "train"))
+def _nan_skip(ctx: Context):
+    from dataclasses import replace
+
+    import numpy as np
+
+    from repro.models import mlp as MLP
+    from repro.optim import read_skipped
+    from repro.train import MLPBackend
+    from repro.train.backends import (balanced_bounds, make_optimizer_for,
+                                      scanned_epoch_fn)
+    cfg, data, spec = scenarios.tiny_mlp(n_stages=2, epochs=(1, 1),
+                                         n_train=512, batch_size=128)
+    spec = replace(spec, nan_guard=True)
+    be = MLPBackend(cfg, data, spec, bounds=balanced_bounds(cfg, 2))
+    params = MLP.init_params(cfg, jax.random.PRNGKey(0))
+    sils = be.make_sils(jax.random.PRNGKey(3), spec.kappa)
+    p0 = be.split(params)[0]
+    opt = make_optimizer_for(spec.stage(0), spec)
+    assert opt.name.startswith("guard("), opt.name
+    epoch_fn = scanned_epoch_fn(be.build_parallel_step(0, opt, sils,
+                                                       accum=1))
+    batches = be.epoch_arrays(0, shuffle=False)
+    poison_idx = batches[0].shape[0] // 2
+    x = np.asarray(batches[0]).copy()
+    x[poison_idx, 0, 0] = np.inf          # one bad batch mid-epoch
+    poisoned = (jnp.asarray(x),) + tuple(batches[1:])
+    excised = tuple(jnp.concatenate([b[:poison_idx], b[poison_idx + 1:]])
+                    for b in batches)
+
+    p_ref, o_ref, _ = epoch_fn(p0, opt.init(be.trainable(p0)), excised)
+    p_got, o_got, _ = epoch_fn(p0, opt.init(be.trainable(p0)), poisoned)
+    assert int(read_skipped(o_got)) == 1, "guard did not skip the bad batch"
+    assert int(read_skipped(o_ref)) == 0
+    return p_ref, p_got
+
+
+# ==========================================================================
 # plan: the auto-partitioner's searched cut is as trainable as the hand cut
 # ==========================================================================
 

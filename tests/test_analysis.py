@@ -266,7 +266,7 @@ def test_entry_points_cover_all_surfaces(clean_results):
     mlp = entrypoints.artifacts(clean_results["paper_mlp"][0])
     lm = entrypoints.artifacts(clean_results["qwen2-1.5b"][0])
     assert set(mlp) == {"train/mlp_sil_epoch", "train/mlp_parallel_epoch",
-                        "sil/lookup_loss"}
+                        "train/mlp_guarded_epoch", "sil/lookup_loss"}
     assert set(lm) == {"train/lm_stage_step", "train/lm_parallel_stage_step",
                        "train/lm_auto_parallel_stage_step",
                        "serve/prefill_admit", "serve/decode_chunk",

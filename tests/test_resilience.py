@@ -1,0 +1,482 @@
+"""repro.resilience: deterministic fault injection, self-healing stage
+execution, atomic checkpoints, the NaN/inf step guard, and serve-side
+graceful degradation.
+
+The recovery contract under test is the paper's zero-communication
+property: a stage failure is local, so an injected fault plus a correct
+recovery must reproduce the fault-free run **bitwise** (see the
+``resilience/crash_equivalence`` oracle for the conformance-level pin).
+
+Multi-device cases follow the test_dist convention; run them with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q tests/test_resilience.py
+"""
+import os
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (CheckpointCorruptError, available_steps,
+                              restore_checkpoint, restore_latest_valid,
+                              save_checkpoint)
+from repro.dist import StageExecutor, placement as P
+from repro.optim import read_skipped, sgd_momentum, step_guard
+from repro.resilience import (CheckpointCorruption, FakeClock, FaultSchedule,
+                              NaNInjection, RetryPolicy, StageCrash,
+                              StragglerDelay, SupervisedExecutor,
+                              TransientError, UnrecoveredFaultError)
+from repro.resilience.faults import poison_batch
+from repro.train.backends import MLPBackend, balanced_bounds, \
+    make_optimizer_for
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 4, reason="needs >=4 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+N_TICKS = 3
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ==========================================================================
+# fixtures: one tiny 2-stage MLP world, one fault-free reference run
+# ==========================================================================
+
+@pytest.fixture(scope="module")
+def mlp_world(tiny_mlp):
+    """Factory: (backend, stage_params, sils, hps, spec) — identical per
+    call, so a fault schedule is the only thing that varies between runs."""
+    def build(nan_guard=False):
+        from repro.models import mlp as MLP
+        cfg, data, spec = tiny_mlp(n_stages=2, epochs=(N_TICKS, N_TICKS),
+                                   n_train=256, batch_size=64)
+        if nan_guard:
+            spec = replace(spec, nan_guard=True)
+        be = MLPBackend(cfg, data, spec, bounds=balanced_bounds(cfg, 2))
+        params = MLP.init_params(cfg, jax.random.PRNGKey(0))
+        sils = be.make_sils(jax.random.PRNGKey(3), spec.kappa)
+        hps = [spec.stage(k) for k in range(2)]
+        return be, be.split(params), sils, hps, spec
+    return build
+
+
+def _executor(world, root):
+    be, sp0, sils, hps, spec = world
+    opts = [make_optimizer_for(hp, spec) for hp in hps]
+    return StageExecutor(be, P.round_robin(2), sp0, sils, opts, hps,
+                         shuffle=True, ckpt_dir=root)
+
+
+@pytest.fixture(scope="module")
+def ref_params(mlp_world, tmp_path_factory):
+    """Fault-free gather() — the bitwise target every recovery must hit."""
+    ex = _executor(mlp_world(), str(tmp_path_factory.mktemp("ref")))
+    ex.run(N_TICKS)
+    return ex.gather()
+
+
+def _supervised(world, root, schedule, *, policy=None, strict=True):
+    ex = _executor(world, root)
+    clk = FakeClock()
+    sup = SupervisedExecutor(
+        ex, schedule=schedule, clock=clk.monotonic, sleep=clk.sleep,
+        policy=policy or RetryPolicy(max_retries=4), strict=strict)
+    sup.run(N_TICKS)
+    return ex, sup
+
+
+# ==========================================================================
+# fault primitives (pure — no training)
+# ==========================================================================
+
+def test_fault_schedule_sample_deterministic():
+    def shape(s):
+        # repr, not ==: a sampled NaNInjection(value=nan) breaks dataclass
+        # equality (nan != nan) while still being the same fault
+        return [repr(f) for f in s.faults]
+
+    a = FaultSchedule.sample(7, n_stages=3, n_ticks=5, n_faults=4)
+    b = FaultSchedule.sample(7, n_stages=3, n_ticks=5, n_faults=4)
+    assert shape(a) == shape(b) and a.seed == 7
+    assert shape(a) != shape(FaultSchedule.sample(8, n_stages=3, n_ticks=5,
+                                                  n_faults=4))
+    coords = [(f.stage, f.tick) for f in a.faults]
+    assert len(set(coords)) == len(coords)          # distinct (stage, tick)
+    assert all(f.tick >= 1 for f in a.faults)       # tick 0 always completes
+    with pytest.raises(ValueError, match="unknown fault kinds"):
+        FaultSchedule.sample(0, n_stages=2, n_ticks=3, kinds=("meteor",))
+
+
+def test_fault_consumption_prevents_replay_refire():
+    sched = FaultSchedule([StageCrash(stage=0, tick=1)])
+    f = sched.crash_at(0, 1)
+    assert f is not None
+    sched.consume(f)
+    assert sched.crash_at(0, 1) is None             # replayed tick: no refire
+    assert sched.unconsumed() == []
+
+
+def test_transient_failing_counts_down():
+    sched = FaultSchedule([TransientError(stage=0, tick=2, failures=2)])
+    assert sched.transient_failing(0, 2)
+    assert sched.transient_failing(0, 2)
+    assert not sched.transient_failing(0, 2)        # cleared
+    assert sched.unconsumed() == []
+
+
+def test_poison_batch_tuple_dict_and_int_only():
+    x = np.ones((4, 3), np.float32)
+    y = np.zeros((4,), np.int32)
+    px, py = poison_batch((x, y), float("inf"))
+    assert np.isinf(px.reshape(-1)[0]) and np.array_equal(py, y)
+    assert np.isfinite(x).all()                     # original untouched
+    d = poison_batch({"labels": y, "x": x}, float("nan"))
+    assert np.isnan(d["x"].reshape(-1)[0])
+    with pytest.raises(ValueError, match="no floating-point"):
+        poison_batch((y,), 1.0)
+
+
+def test_fake_clock_sleep_advances():
+    clk = FakeClock(10.0)
+    clk.sleep(0.5)
+    clk.advance(0.25)
+    assert clk.monotonic() == 10.75 and clk.sleeps == [0.5]
+
+
+def test_retry_policy_deterministic_per_stage_jitter():
+    pol = RetryPolicy(max_retries=3, base=0.1, factor=2.0, seed=5)
+    d0 = list(pol.delays(0))
+    assert d0 == list(pol.delays(0))                # replayable
+    assert d0 != list(pol.delays(1))                # desynchronized stages
+    assert len(d0) == 3 and d0[0] < d0[1] < d0[2]   # exponential growth
+
+
+# ==========================================================================
+# atomic checkpoints: durability + fallback (repro.checkpoint)
+# ==========================================================================
+
+def _tree(v=0.0):
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) + v,
+            "b": jnp.ones((3,), jnp.bfloat16) * (1.5 + v)}
+
+
+def test_atomic_save_leaves_no_temp_files(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    assert not [f for f in os.listdir(d) if ".tmp" in f]
+    _leaves_equal(restore_checkpoint(d, _tree()), _tree())
+
+
+def test_keep_last_prunes_old_steps(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 6):
+        save_checkpoint(d, s, _tree(s), keep_last=2)
+    assert available_steps(d) == [4, 5]
+    _leaves_equal(restore_checkpoint(d, _tree()), _tree(5))
+
+
+def test_checksum_detects_bit_rot_and_fallback_cures_it(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    save_checkpoint(d, 2, _tree(2))
+    npz = os.path.join(d, "ckpt_00000002.npz")
+    data = bytearray(open(npz, "rb").read())
+    data[len(data) // 2 + len(data) // 4] ^= 0xFF
+    open(npz, "wb").write(bytes(data))
+    # pinned step: corruption raises, never substitutes other state
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(d, _tree(), step=2)
+    # latest-valid: falls back to step 1
+    tree, step = restore_latest_valid(d, _tree())
+    assert step == 1
+    _leaves_equal(tree, _tree(1))
+
+
+def test_torn_write_is_skipped_not_fatal(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    # a crash mid-save leaves arrays without the committing manifest
+    save_checkpoint(d, 2, _tree(2))
+    os.remove(os.path.join(d, "ckpt_00000002.json"))
+    tree, step = restore_latest_valid(d, _tree())
+    assert step == 1
+    _leaves_equal(tree, _tree(1))
+
+
+def test_all_steps_invalid_reports_count(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1))
+    save_checkpoint(d, 2, _tree(2))
+    for s in (1, 2):
+        os.remove(os.path.join(d, f"ckpt_0000000{s}.json"))
+    with pytest.raises(CheckpointCorruptError, match="older step"):
+        restore_latest_valid(d, _tree())
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        restore_latest_valid(str(tmp_path / "empty"), _tree())
+
+
+def test_like_mismatch_is_not_curable(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    with pytest.raises(ValueError, match="does not match") as ei:
+        restore_checkpoint(d, {"other": jnp.zeros((2,))}, step=1)
+    assert not isinstance(ei.value, CheckpointCorruptError)
+
+
+# ==========================================================================
+# supervised recovery: every fault kind fires AND the run stays bitwise
+# ==========================================================================
+
+def test_crash_recovery_bitwise_and_others_keep_ticking(
+        mlp_world, ref_params, tmp_path):
+    sched = FaultSchedule([StageCrash(stage=1, tick=1)])
+    ex, sup = _supervised(mlp_world(), str(tmp_path), sched)
+    assert ("fault", "crash", 1, 1) in sup.events
+    assert any(e[0] == "recover" and e[1] == 1 for e in sup.events)
+    # zero-communication payoff: stage 0 advanced while stage 1 was down
+    i_fault = sup.events.index(("fault", "crash", 1, 1))
+    i_rec = next(i for i, e in enumerate(sup.events)
+                 if e[0] == "recover" and e[1] == 1)
+    assert any(e[0] == "tick" and e[1] == 0
+               for e in sup.events[i_fault:i_rec]), sup.events
+    assert not sup.unrecovered and sup.report()["never_fired"] == []
+    _leaves_equal(ref_params, ex.gather())
+
+
+def test_transient_retries_in_place_without_restore(
+        mlp_world, ref_params, tmp_path):
+    sched = FaultSchedule([TransientError(stage=0, tick=1, failures=2)])
+    ex, sup = _supervised(mlp_world(), str(tmp_path), sched)
+    assert sup.faults_seen.count(("transient", 0, 1)) == 2
+    assert not any(e[0] == "recover" for e in sup.events)  # state survived
+    _leaves_equal(ref_params, ex.gather())
+
+
+@pytest.mark.parametrize("mode", ["truncate_manifest", "truncate_npz",
+                                  "flip_bytes"])
+def test_corruption_recovery_routes_around_bad_file(
+        mlp_world, ref_params, tmp_path, mode):
+    sched = FaultSchedule([CheckpointCorruption(stage=0, tick=2, mode=mode)])
+    ex, sup = _supervised(mlp_world(), str(tmp_path), sched)
+    assert ("fault", "ckpt_corruption", 0, 2) in sup.events
+    # the newest ckpt was damaged: recovery restored an OLDER tick and
+    # replayed further than a plain crash would
+    rec = next(e for e in sup.events if e[0] == "recover" and e[1] == 0)
+    assert rec[2] < 2
+    assert not sup.unrecovered
+    _leaves_equal(ref_params, ex.gather())
+
+
+def test_straggler_defers_stage_without_stalling_others(
+        mlp_world, ref_params, tmp_path):
+    sched = FaultSchedule([StragglerDelay(stage=1, tick=1, delay=2.0)])
+    ex, sup = _supervised(mlp_world(), str(tmp_path), sched)
+    i_fault = sup.events.index(("fault", "straggler", 1, 1))
+    i_next = next(i for i, e in enumerate(sup.events)
+                  if i > i_fault and e[:2] == ("tick", 1))
+    assert any(e[:2] == ("tick", 0)
+               for e in sup.events[i_fault:i_next]), sup.events
+    assert not any(e[0] == "recover" for e in sup.events)  # just late
+    _leaves_equal(ref_params, ex.gather())
+
+
+def test_sampled_mixed_schedule_recovers(mlp_world, ref_params, tmp_path):
+    sched = FaultSchedule.sample(
+        0, n_stages=2, n_ticks=N_TICKS, n_faults=3,
+        kinds=("crash", "transient", "ckpt_corruption", "straggler"))
+    ex, sup = _supervised(mlp_world(), str(tmp_path), sched)
+    assert not sup.unrecovered and sup.report()["never_fired"] == []
+    _leaves_equal(ref_params, ex.gather())
+
+
+def test_retry_budget_exhaustion_strict_raises(mlp_world, tmp_path):
+    sched = FaultSchedule([TransientError(stage=1, tick=1, failures=99)])
+    with pytest.raises(UnrecoveredFaultError, match="stage 1"):
+        _supervised(mlp_world(), str(tmp_path), sched,
+                    policy=RetryPolicy(max_retries=2))
+
+
+def test_retry_budget_exhaustion_lenient_isolates_failure(
+        mlp_world, tmp_path):
+    sched = FaultSchedule([TransientError(stage=1, tick=1, failures=99)])
+    ex, sup = _supervised(mlp_world(), str(tmp_path), sched,
+                          policy=RetryPolicy(max_retries=2), strict=False)
+    assert sup.unrecovered and sup.unrecovered[0][0] == 1
+    assert sup.report()["health"][1] == "failed"
+    assert ex.ticks[0] == N_TICKS                   # stage 0 finished anyway
+
+
+def test_supervisor_requires_ckpt_dir(mlp_world):
+    be, sp0, sils, hps, spec = mlp_world()
+    opts = [make_optimizer_for(hp, spec) for hp in hps]
+    ex = StageExecutor(be, P.round_robin(2), sp0, sils, opts, hps)
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        SupervisedExecutor(ex)
+
+
+# ==========================================================================
+# NaN/inf step guard
+# ==========================================================================
+
+def test_step_guard_skips_nonfinite_and_counts():
+    opt = step_guard(sgd_momentum(0.5, momentum=0.0))
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    st = opt.init(p)
+    p1, st1 = opt.update({"w": jnp.asarray([0.1, 0.1])}, st, p)
+    np.testing.assert_allclose(np.asarray(p1["w"]), [0.95, 1.95])
+    p2, st2 = opt.update({"w": jnp.asarray([jnp.inf, 0.1])}, st1, p1)
+    _leaves_equal(p2, p1)                           # step skipped wholesale
+    assert int(read_skipped(st2)) == 1
+    p3, st3 = opt.update({"w": jnp.asarray([jnp.nan, 0.1])}, st2, p2)
+    _leaves_equal(p3, p2)
+    assert int(read_skipped(st3)) == 2
+    assert read_skipped({"no": 1}) is None and read_skipped(0.0) is None
+
+
+def test_nan_injection_guard_skips_and_stays_finite(mlp_world, tmp_path):
+    sched = FaultSchedule([NaNInjection(stage=0, tick=1)])
+    ex, sup = _supervised(mlp_world(nan_guard=True), str(tmp_path), sched)
+    assert int(jax.device_get(read_skipped(ex.opt_states[0]))) == 1
+    assert int(jax.device_get(read_skipped(ex.opt_states[1]))) == 0
+    for leaf in jax.tree_util.tree_leaves(ex.gather()):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_nan_without_guard_poisons_params(mlp_world, tmp_path):
+    sched = FaultSchedule([NaNInjection(stage=0, tick=1)])
+    ex, sup = _supervised(mlp_world(), str(tmp_path), sched)
+    leaves = jax.tree_util.tree_leaves(ex.gather()[0])
+    assert any(not np.isfinite(np.asarray(x)).all() for x in leaves)
+
+
+def test_trainer_skipped_budget_aborts(mlp_world):
+    from repro.train.trainer import (SkippedStepBudgetExceeded, Trainer,
+                                     TrainState)
+    be, _, _, _, spec = mlp_world()
+    tr = Trainer(be, replace(spec, max_skipped_steps=1))
+    state = TrainState(stage_params=[])
+    tr.note_skipped(state, {"skipped": jnp.int32(1), "inner": ()}, "p", 0)
+    assert state.skipped_steps == 1                 # at budget: fine
+    with pytest.raises(SkippedStepBudgetExceeded, match="> budget 1"):
+        tr.note_skipped(state, {"skipped": jnp.int32(2), "inner": ()},
+                        "p", 1)
+    # high-water: re-reading the same cumulative counter never double-counts
+    state2 = TrainState(stage_params=[])
+    tr2 = Trainer(be, spec)                         # no budget
+    for _ in range(3):
+        tr2.note_skipped(state2, {"skipped": jnp.int32(2), "inner": ()},
+                         "p", 0)
+    assert state2.skipped_steps == 2
+    assert state2.history.meta["skipped_steps"] == {"p[0]": 2}
+
+
+# ==========================================================================
+# serve: graceful degradation (deadlines, queue limits, cache pressure)
+# ==========================================================================
+
+def _ticking(dt=0.1):
+    clk = FakeClock()
+
+    def tick():
+        t = clk.monotonic()
+        clk.advance(dt)
+        return t
+    return tick
+
+
+def test_serve_queue_timeout_rejects_waiter(serve_world):
+    from repro.serve import Engine
+    from repro.verify.scenarios import greedy_reference, serve_requests
+    cfg, params = serve_world()
+    reqs = serve_requests(cfg, lens=(8, 8), news=(8, 8))
+    eng = Engine(cfg, params, max_slots=1, decode_block=4,
+                 max_queue_wait_ms=250, clock=_ticking())
+    a, b = eng.generate(reqs)
+    assert a.finish_reason == "length"
+    assert a.tokens == greedy_reference(cfg, params, reqs[0])
+    assert b.finish_reason == "rejected" and b.tokens == ()
+    assert eng.stats["rejected_queue"] == 1
+    assert ("reject", 1) in eng.scheduler.events
+
+
+def test_serve_deadline_sheds_mid_decode(serve_world):
+    from repro.serve import Engine
+    from repro.verify.scenarios import greedy_reference, serve_requests
+    cfg, params = serve_world()
+    (r,) = serve_requests(cfg, lens=(8,), news=(8,))
+    r = replace(r, deadline_ms=150.0)
+    eng = Engine(cfg, params, max_slots=1, decode_block=4, clock=_ticking())
+    (c,) = eng.generate([r])
+    assert c.finish_reason == "rejected"
+    assert 0 < c.n_generated < 8                    # partial tokens kept
+    ref = greedy_reference(cfg, params, r)
+    assert c.tokens == ref[:c.n_generated]          # and they're the real ones
+    assert eng.stats["rejected_deadline"] == 1
+
+
+def test_serve_cache_pressure_admission_control(serve_world):
+    from repro.serve import Engine
+    from repro.verify.scenarios import greedy_reference, serve_requests
+    cfg, params = serve_world()
+    reqs = serve_requests(cfg, lens=(8, 8), news=(6, 60))
+    eng = Engine(cfg, params, max_slots=2, decode_block=4,
+                 max_cache_tokens=16)
+    a, b = eng.generate(reqs)
+    assert a.finish_reason == "length"
+    assert a.tokens == greedy_reference(cfg, params, reqs[0])
+    assert b.finish_reason == "rejected" and b.tokens == ()
+    assert eng.stats["rejected_cache"] == 1
+    # the grow-only pool was sized for the ACCEPTED span (one 32-token
+    # bucket), never for the 68-token request the cap shed
+    assert eng._pool.cache_len == 32
+
+
+def test_serve_knobs_off_is_legacy_and_loose_limits_are_noop(serve_world):
+    from repro.serve import Engine
+    from repro.verify.scenarios import serve_requests
+    cfg, params = serve_world()
+    reqs = serve_requests(cfg, lens=(8, 6), news=(6, 8))
+    legacy = Engine(cfg, params, max_slots=2, decode_block=4).generate(reqs)
+    shed = Engine(cfg, params, max_slots=2, decode_block=4,
+                  max_queue_wait_ms=1e9, clock=_ticking()).generate(reqs)
+    assert [c.tokens for c in legacy] == [c.tokens for c in shed]
+    assert all(c.finish_reason == "length" for c in shed)
+
+
+# ==========================================================================
+# multi-device: recovery with stages pinned on distinct devices
+# ==========================================================================
+
+@multi_device
+def test_crash_recovery_bitwise_multi_device(mlp_world, ref_params,
+                                             tmp_path):
+    sched = FaultSchedule([StageCrash(stage=0, tick=1),
+                           StageCrash(stage=1, tick=2)])
+    ex, sup = _supervised(mlp_world(), str(tmp_path), sched)
+    assert not sup.unrecovered
+    _leaves_equal(ref_params, ex.gather())
+    # restored buffers live on each stage's ASSIGNED device, not device 0
+    for k in range(2):
+        for leaf in jax.tree_util.tree_leaves(ex.params[k]):
+            assert leaf.devices() == {ex.devices[k]}
+
+
+@multi_device
+def test_mixed_faults_multi_device(mlp_world, ref_params, tmp_path):
+    sched = FaultSchedule.sample(
+        3, n_stages=2, n_ticks=N_TICKS, n_faults=3,
+        kinds=("crash", "transient", "ckpt_corruption", "straggler"))
+    ex, sup = _supervised(mlp_world(), str(tmp_path), sched)
+    assert not sup.unrecovered and sup.report()["never_fired"] == []
+    _leaves_equal(ref_params, ex.gather())
