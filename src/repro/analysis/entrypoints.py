@@ -15,6 +15,14 @@ is exactly what makes the donation-coverage rule meaningful off-TPU.
 Arch routing: MLP configs (paper_mlp) get the MLP epoch steps; LM configs
 get the PartitionPlan stage steps and the serving engine steps.  The SIL
 lookup+loss kernel entry exists for both.
+
+These targets double as the repro.obs instrumentation proof: the builders
+go through the instrumented classes (``Engine``, the backends the
+``Trainer``/``StageExecutor`` drive), so the trace lint failing clean on
+``train/mlp_guarded_epoch`` / ``train/lm_parallel_stage_step`` /
+``serve/decode_chunk`` certifies that metrics/span collection lives
+entirely OUTSIDE the jitted steps — zero host callbacks added
+(tests/test_obs.py also pins the jaxprs byte-identical).
 """
 from __future__ import annotations
 

@@ -34,7 +34,7 @@ from typing import Iterator, List, Sequence
 from repro.analysis.core import AnalysisContext, Finding, register
 
 HOT_PATH_DIRS = ("train", "serve", "dist", "kernels", "core", "models",
-                 "resilience")
+                 "resilience", "obs")
 PRAGMA = "# repro: allow-"
 HOST_SYNC_ATTRS = ("item", "device_get", "block_until_ready")
 

@@ -25,6 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.events import default_log
+from repro.obs.registry import default_registry
+
 _BF16 = jnp.bfloat16.dtype
 
 
@@ -108,6 +111,10 @@ def save_checkpoint(directory: str, step: int, tree: Any, metadata=None,
                                     .encode("utf-8")))
     if keep_last:
         prune_checkpoints(directory, keep_last)
+    # observability (module-level functions -> the process-wide stream)
+    default_registry().counter("checkpoint_saves_total").inc()
+    default_log().emit("checkpoint_save", step=step, directory=directory,
+                       leaves=len(arrays))
     return path
 
 
@@ -221,7 +228,11 @@ def restore_latest_valid(directory: str, like: Any,
     errors: List[CheckpointCorruptError] = []
     for step in reversed(steps):
         try:
-            return _load_step(directory, like, step, shardings), step
+            tree = _load_step(directory, like, step, shardings)
+            default_registry().counter("checkpoint_restores_total").inc()
+            default_log().emit("checkpoint_restore", step=step,
+                               directory=directory, skipped=len(errors))
+            return tree, step
         except CheckpointCorruptError as e:
             errors.append(e)
     tail = f" ({len(errors) - 1} older step(s) also invalid)" \
@@ -238,7 +249,11 @@ def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
     if step is None:
         tree, _ = restore_latest_valid(directory, like, shardings)
         return tree
-    return _load_step(directory, like, int(step), shardings)
+    tree = _load_step(directory, like, int(step), shardings)
+    default_registry().counter("checkpoint_restores_total").inc()
+    default_log().emit("checkpoint_restore", step=int(step),
+                       directory=directory, skipped=0)
+    return tree
 
 
 def available_steps(directory: str) -> List[int]:

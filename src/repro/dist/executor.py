@@ -34,6 +34,9 @@ import jax.numpy as jnp
 
 from repro.dist import lifecycle
 from repro.dist.placement import PlacementPlan
+from repro.obs.metrics import LOSS_BUCKETS
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import TID_STAGE0, Tracer
 from repro.train.backends import scanned_epoch_fn
 
 
@@ -44,7 +47,9 @@ class StageExecutor:
                  stage_params: Sequence, sils: Sequence, opts: Sequence,
                  hps: Sequence, *, seed_base: int = 0, shuffle: bool = True,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
-                 ckpt_keep_last: Optional[int] = None):
+                 ckpt_keep_last: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         placement.validate(backend.n_stages)
         self.be = backend
         self.placement = placement
@@ -73,8 +78,17 @@ class StageExecutor:
         self._global_ticks = 0
         # metrics high-water mark per stage: a replayed tick (after
         # resume_stage) re-runs the math but must not re-log its loss or
-        # re-count its MACs — finalize would double-report otherwise
+        # re-count its MACs — finalize would double-report otherwise.
+        # obs observes sit INSIDE this guard for the same reason (drain
+        # after replay must not double-count; pinned in tests/test_obs.py)
         self._metrics_upto: List[int] = [0] * n
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
+        self._loss_hist = self.metrics.device_histogram(
+            "train_loss", LOSS_BUCKETS,
+            help="per-step training loss (device-accumulated)")
+        self._ticks_counter = self.metrics.counter(
+            "executor_ticks_total", help="dispatched stage ticks, by stage")
         self._pending: list = []
         self._logged_steps: list = []
         self._logged_stages: list = []
@@ -128,10 +142,14 @@ class StageExecutor:
             bk = batches if self.batch_hook is None \
                 else self.batch_hook(k, ep, batches)
             bk = jax.device_put(bk, self.devices[k])
-            self.params[k], self.opt_states[k], _ = self._fns[k](
-                self.params[k], self.opt_states[k], bk)
+            with self.tracer.span(f"tick {ep}", cat="stage",
+                                  tid=TID_STAGE0 + k, stage=k, tick=ep):
+                self.params[k], self.opt_states[k], losses = self._fns[k](
+                    self.params[k], self.opt_states[k], bk)
             if ep >= self._metrics_upto[k]:
                 self.cum_macs += be.stage_macs(k) * n_samples
+                self._loss_hist.observe_device(losses)
+                self._ticks_counter.inc(1, stage=k)
                 self._metrics_upto[k] = ep + 1
             self.ticks[k] = ep + 1
 
@@ -142,16 +160,20 @@ class StageExecutor:
             dev = self.devices[k]
             bk = batch if self.batch_hook is None \
                 else self.batch_hook(k, i, batch)
-            if k == 0:
-                b0 = jax.device_put(bk, dev)
-                self.params[0], self.opt_states[0], loss = self._fns[0](
-                    self.params[0], self.opt_states[0], b0, b0["labels"])
-            else:
-                labels = jax.device_put(bk["labels"], dev)
-                self.params[k], self.opt_states[k], loss = self._fns[k](
-                    self.params[k], self.opt_states[k], labels)
+            with self.tracer.span(f"tick {i}", cat="stage",
+                                  tid=TID_STAGE0 + k, stage=k, tick=i):
+                if k == 0:
+                    b0 = jax.device_put(bk, dev)
+                    self.params[0], self.opt_states[0], loss = self._fns[0](
+                        self.params[0], self.opt_states[0], b0, b0["labels"])
+                else:
+                    labels = jax.device_put(bk["labels"], dev)
+                    self.params[k], self.opt_states[k], loss = self._fns[k](
+                        self.params[k], self.opt_states[k], labels)
             if i >= self._metrics_upto[k]:
                 self._pending.append(loss)
+                self._loss_hist.observe_device(loss)
+                self._ticks_counter.inc(1, stage=k)
                 self._logged_steps.append(i)
                 self._logged_stages.append(k)
                 self._metrics_upto[k] = i + 1
@@ -227,3 +249,6 @@ class StageExecutor:
         # blocking point the executor already has
         for k in range(self.n):
             trainer.note_skipped(state, self.opt_states[k], phase_name, k)
+        # executor-join flush boundary: fold the device-resident metric
+        # accumulators into their host series (idempotent)
+        self.metrics.drain()

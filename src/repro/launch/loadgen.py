@@ -1,0 +1,213 @@
+"""Open-loop Poisson load generator against the real serving engine.
+
+Unlike ``launch/serve.py`` (closed loop: every request present at t=0),
+this drives ``Engine.generate(..., arrivals=)`` with exponential
+inter-arrival times — the open-loop model where the offered load does NOT
+slow down when the server falls behind, so queueing delay shows up in
+TTFT instead of being hidden by the harness.
+
+The run is two passes over ONE engine:
+
+1. **Warmup** (closed loop, throwaway registry): one batch per distinct
+   (prompt-length, group-size) shape, so the measured pass hits compiled
+   prefill programs and TTFT measures serving latency, not XLA.
+2. **Measured** (open loop, fresh registry via ``Engine.bind_metrics``):
+   the Poisson trace, timed end to end.
+
+The workload mixes prompt/output lengths (quantized to a small ladder —
+the engine compiles one prefill per distinct prompt length) and includes
+deliberately oversized requests (span > ``max_cache_tokens``) so the
+cache-pressure shed path deterministically fires and the shed-rate row in
+the report is never vacuously zero.
+
+Output: a schema-versioned report (``repro.obs/1``) with the workload
+spec, SLO summary (p50/p99 TTFT, tokens/s, queue depth, cache occupancy,
+shed rate), the full metric export, and event-log totals — written to
+``results/BENCH_9.json`` and validated by ``launch/metrics.py --check``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.loadgen --preset tiny \
+      [--out results/BENCH_9.json] [--trace results/trace.json] \
+      [--n 24] [--rate 10] [--seed 0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.models import model as M
+from repro.obs.events import EventLog
+from repro.obs.registry import SCHEMA, MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.serve import Engine, GenerationConfig, Request
+
+# Workload presets.  Prompt lengths come from a tiny ladder (the engine
+# compiles one prefill program per distinct length); ``oversized`` counts
+# requests rewritten to exceed the cache budget (deterministic sheds).
+PRESETS: Dict[str, Dict[str, Any]] = {
+    "tiny": dict(arch="qwen2-1.5b", n_requests=10, rate_rps=20.0,
+                 prompt_lens=(4, 8), new_tokens=(4, 8), slots=2,
+                 decode_block=8, max_cache_tokens=64,
+                 max_queue_wait_ms=60_000.0, oversized=1),
+    "full": dict(arch="qwen2-1.5b", n_requests=48, rate_rps=12.0,
+                 prompt_lens=(8, 16), new_tokens=(8, 16), slots=4,
+                 decode_block=16, max_cache_tokens=192,
+                 max_queue_wait_ms=60_000.0, oversized=2),
+}
+
+
+def build_workload(cfg, p: Dict[str, Any], seed: int,
+                   n: Optional[int] = None, rate: Optional[float] = None):
+    """(requests, arrivals) — a reproducible Poisson trace over mixed
+    prompt/output lengths, with the last ``oversized`` requests rewritten
+    to blow the cache budget."""
+    n = int(n or p["n_requests"])
+    rate = float(rate or p["rate_rps"])
+    rng = np.random.default_rng(seed)
+    lens = rng.choice(p["prompt_lens"], size=n).astype(int)
+    news = rng.choice(p["new_tokens"], size=n).astype(int)
+    for j in range(min(p["oversized"], n)):
+        lens[n - 1 - j] = p["max_cache_tokens"] + 8
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    reqs = [Request(tokens=rng.integers(0, cfg.vocab_size,
+                                        size=int(ln)).astype(np.int32),
+                    gen=GenerationConfig(max_new_tokens=int(nn)),
+                    id=f"load-{i}")
+            for i, (ln, nn) in enumerate(zip(lens, news))]
+    return reqs, [float(a) for a in arrivals], n, rate
+
+
+def _warmup(engine, cfg, p: Dict[str, Any]) -> None:
+    """Compile the prefill programs the measured pass will hit: one
+    closed-loop batch per (prompt length, group size) shape."""
+    rng = np.random.default_rng(1)
+    nn = int(min(p["new_tokens"]))
+    for ln in p["prompt_lens"]:
+        for size in {1, p["slots"]}:
+            reqs = [Request(tokens=rng.integers(0, cfg.vocab_size,
+                                                size=int(ln)
+                                                ).astype(np.int32),
+                            gen=GenerationConfig(max_new_tokens=nn),
+                            id=f"warm-{ln}-{size}-{i}")
+                    for i in range(size)]
+            engine.generate(reqs)
+
+
+def run_loadgen(preset: str = "tiny", *, seed: int = 0,
+                n: Optional[int] = None, rate: Optional[float] = None,
+                trace_path: Optional[str] = None) -> Dict[str, Any]:
+    """One full loadgen run; returns the schema-versioned report dict."""
+    p = PRESETS[preset]
+    cfg = get(p["arch"], smoke=True).replace(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    events = EventLog(capacity=8192)
+    tracer = Tracer()
+    engine = Engine(cfg, params, max_slots=p["slots"],
+                    decode_block=p["decode_block"],
+                    max_cache_tokens=p["max_cache_tokens"],
+                    max_queue_wait_ms=p["max_queue_wait_ms"],
+                    tracer=tracer, event_log=events)
+    _warmup(engine, cfg, p)
+    events.clear()                     # report covers the measured pass only
+    measured = MetricsRegistry()
+    engine.bind_metrics(measured)
+
+    reqs, arrivals, n, rate = build_workload(cfg, p, seed, n=n, rate=rate)
+    t0 = time.perf_counter()
+    outs = engine.generate(reqs, arrivals=arrivals)
+    wall = time.perf_counter() - t0
+
+    if trace_path:
+        os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
+        tracer.write_chrome_trace(trace_path)
+
+    export = measured.export()
+    stats = engine.stats
+    n_tokens = measured.get("serve_tokens_total").total()
+    by_kind: Dict[str, int] = {}
+    for ev in events.records():
+        by_kind[ev.kind] = by_kind.get(ev.kind, 0) + 1
+    report = {
+        "schema": SCHEMA,
+        "kind": "loadgen",
+        "preset": preset,
+        "workload": {
+            "arch": p["arch"], "n_requests": n, "rate_rps": rate,
+            "seed": seed, "prompt_lens": list(p["prompt_lens"]),
+            "new_tokens": list(p["new_tokens"]), "slots": p["slots"],
+            "decode_block": p["decode_block"],
+            "max_cache_tokens": p["max_cache_tokens"],
+            "max_queue_wait_ms": p["max_queue_wait_ms"],
+            "oversized": p["oversized"],
+        },
+        "slo": {
+            "ttft_ms": measured.get("serve_ttft_ms").summary(),
+            "tokens_per_s": n_tokens / wall if wall > 0 else 0.0,
+            "n_tokens": n_tokens,
+            "wall_s": wall,
+            "queue_depth": measured.get("serve_queue_depth").summary(),
+            "slots_busy": measured.get("serve_slots_busy").summary(),
+            "peak_slots_busy":
+                measured.get("serve_peak_slots_busy").value(),
+            "cache_tokens": measured.get("serve_cache_tokens").value(),
+            "shed": {
+                "rate": sum(stats.values()) / n,
+                **stats,
+            },
+            "completed": sum(1 for c in outs
+                             if c.finish_reason in ("eos", "length")),
+        },
+        "metrics": export["metrics"],
+        "events": {"n": len(events), "dropped": events.dropped,
+                   "by_kind": by_kind},
+    }
+    return report
+
+
+def summarize(report: Dict[str, Any]) -> str:
+    s = report["slo"]
+    ttft = s["ttft_ms"]
+    shed = s["shed"]
+    return (f"loadgen[{report['preset']}] n={report['workload']['n_requests']}"
+            f" rate={report['workload']['rate_rps']:.1f}rps | "
+            f"ttft p50={ttft['p50']:.1f}ms p99={ttft['p99']:.1f}ms | "
+            f"{s['tokens_per_s']:.1f} tok/s | "
+            f"queue p99={s['queue_depth']['p99']} | "
+            f"shed {shed['rate']:.2f} "
+            f"(cache={shed['rejected_cache']} queue={shed['rejected_queue']}"
+            f" deadline={shed['rejected_deadline']}) | "
+            f"completed {s['completed']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--out", default="results/BENCH_9.json")
+    ap.add_argument("--trace", default=None,
+                    help="also write the Chrome trace JSON here")
+    ap.add_argument("--n", type=int, default=None,
+                    help="override the preset's request count")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="override the preset's offered rate (req/s)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    report = run_loadgen(args.preset, seed=args.seed, n=args.n,
+                         rate=args.rate, trace_path=args.trace)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(summarize(report))
+    print(f"wrote {args.out}" + (f" and {args.trace}" if args.trace else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

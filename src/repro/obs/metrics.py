@@ -1,0 +1,269 @@
+"""Typed metrics: ``Counter`` / ``Gauge`` / ``Histogram`` plus their
+device-resident variants.
+
+Host metrics are plain labeled series — cheap dict updates on the control
+plane, never inside a jitted region.  The device variants
+(``DeviceCounter`` / ``DeviceHistogram``) hold **device-resident int32
+state** updated by lazily-dispatched device ops (the same zero-host-sync
+idiom as ``optim.step_guard``'s skip counter): ``add`` / ``observe_device``
+enqueue a few XLA ops and return immediately, and the single sanctioned
+device->host read happens at ``drain()`` — which callers invoke only at
+the flush boundaries the system already has (``Trainer.flush_losses``,
+``StageExecutor.finalize``, the engine's end-of-``generate``).
+
+Draining is idempotent by construction: ``drain`` folds the device
+accumulator into the host value and resets it to zero, so reading twice
+never double-counts.  Replay protection (a resumed stage re-running a
+tick) is the *caller's* job — observe under the same high-water guard
+that already suppresses replayed loss logging (see ``dist.executor``).
+
+Histograms are **fixed-bucket**: ``edges`` define ``len(edges) + 1``
+buckets — bucket 0 is ``(-inf, edges[0]]``, bucket i is
+``(edges[i-1], edges[i]]``, and the last bucket is ``(edges[-1], inf)``.
+``percentile(q)`` interpolates linearly inside the covering bucket, so its
+error is bounded by that bucket's width (pinned against numpy percentiles
+in tests/test_obs.py).
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+# default bucket ladders (ms for latency, nats for losses, entities for
+# depth) — log-spaced so p99 of a heavy tail still lands in a narrow bucket
+TTFT_MS_BUCKETS = (1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+                   1000.0, 2500.0, 5000.0, 10000.0, 30000.0, 120000.0)
+LOSS_BUCKETS = (0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 64.0,
+                256.0, 4096.0)
+DEPTH_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 512.0)
+
+
+def _label_key(labels: Dict[str, Any]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _device_key(v) -> Any:
+    """Accumulator key for a device value: committed buffers on different
+    devices (repro.dist pins one stage per device) must never meet in one
+    op, so each device set accumulates separately and ``drain`` folds
+    host-side."""
+    try:
+        return tuple(sorted(map(str, v.devices())))
+    except AttributeError:
+        return None
+
+
+class Metric:
+    """Base: one named metric holding labeled series."""
+
+    kind = "metric"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+
+    def drain(self) -> None:
+        """Fold any device-resident state into the host value (no-op for
+        host-only metrics).  Idempotent."""
+
+    def rows(self) -> Iterable[Dict[str, Any]]:
+        raise NotImplementedError
+
+
+class Counter(Metric):
+    """Monotone counter with optional labels: ``c.inc(3, stage=0)``."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        super().__init__(name, help)
+        self._series: Dict[LabelKey, int] = {}
+
+    def inc(self, n: int = 1, **labels) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name} cannot decrease (n={n})")
+        k = _label_key(labels)
+        self._series[k] = self._series.get(k, 0) + int(n)
+
+    def value(self, **labels) -> int:
+        return self._series.get(_label_key(labels), 0)
+
+    def total(self) -> int:
+        return sum(self._series.values())
+
+    def rows(self):
+        for k, v in sorted(self._series.items()):
+            yield {"name": self.name, "kind": self.kind,
+                   "labels": dict(k), "value": v}
+
+
+class Gauge(Metric):
+    """Last-value gauge with optional labels; ``set_max`` keeps peaks."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        super().__init__(name, help)
+        self._series: Dict[LabelKey, float] = {}
+
+    def set(self, v: float, **labels) -> None:
+        self._series[_label_key(labels)] = float(v)
+
+    def set_max(self, v: float, **labels) -> None:
+        k = _label_key(labels)
+        self._series[k] = max(self._series.get(k, float("-inf")), float(v))
+
+    def value(self, **labels) -> Optional[float]:
+        return self._series.get(_label_key(labels))
+
+    def rows(self):
+        for k, v in sorted(self._series.items()):
+            yield {"name": self.name, "kind": self.kind,
+                   "labels": dict(k), "value": v}
+
+
+class Histogram(Metric):
+    """Fixed-bucket histogram (single series)."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, buckets: Sequence[float],
+                 help: str = ""):
+        super().__init__(name, help)
+        if not buckets or list(buckets) != sorted(buckets):
+            raise ValueError(f"histogram {name}: buckets must be a "
+                             "non-empty ascending sequence")
+        self.edges: Tuple[float, ...] = tuple(float(b) for b in buckets)
+        self.counts = [0] * (len(self.edges) + 1)
+        self.total = 0
+        self.sum = 0.0
+        self.max: Optional[float] = None
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.counts[bisect.bisect_left(self.edges, v)] += 1
+        self.total += 1
+        self.sum += v
+        self.max = v if self.max is None else max(self.max, v)
+
+    @property
+    def mean(self) -> Optional[float]:
+        return self.sum / self.total if self.total else None
+
+    def percentile(self, q: float) -> Optional[float]:
+        """Bucket-interpolated percentile (None when empty).
+
+        Error bound: the width of the covering bucket — the underflow
+        bucket reports ``edges[0]`` and the overflow bucket ``max`` (the
+        tracked maximum), since those buckets have one open end."""
+        if not self.total:
+            return None
+        target = (q / 100.0) * self.total
+        cum = 0.0
+        for i, c in enumerate(self.counts):
+            if not c:
+                continue
+            if cum + c >= target:
+                if i == 0:
+                    return self.edges[0]
+                if i == len(self.edges):
+                    return self.max
+                lo, hi = self.edges[i - 1], self.edges[i]
+                est = lo + (hi - lo) * (target - cum) / c
+                # interpolation can overshoot the tracked maximum inside
+                # the covering bucket; the max is a tighter upper bound
+                return est if self.max is None else min(est, self.max)
+            cum += c
+        return self.max
+
+    def summary(self) -> Dict[str, Any]:
+        return {"count": self.total, "sum": self.sum, "mean": self.mean,
+                "max": self.max, "p50": self.percentile(50),
+                "p90": self.percentile(90), "p99": self.percentile(99)}
+
+    def rows(self):
+        yield {"name": self.name, "kind": self.kind, "labels": {},
+               "edges": list(self.edges), "counts": list(self.counts),
+               **self.summary()}
+
+
+class DeviceCounter(Counter):
+    """Counter whose hot-path half is a device-resident int32 scalar.
+
+    ``add(n)`` accepts a device scalar (or python int) and enqueues one
+    device add — no host sync; ``drain()`` performs the single sanctioned
+    device->host transfer and folds into the host series."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        super().__init__(name, help)
+        self._dev: Dict[Any, Any] = {}   # device-key -> int32 scalar
+
+    def add(self, n) -> None:
+        import jax.numpy as jnp
+        delta = jnp.asarray(n, jnp.int32)
+        k = _device_key(delta)
+        prev = self._dev.get(k)
+        self._dev[k] = delta if prev is None else prev + delta
+
+    def drain(self) -> None:
+        if not self._dev:
+            return
+        import jax
+        accs, self._dev = self._dev, {}
+        got = sum(int(jax.device_get(a))  # repro: allow-host-sync
+                  for a in accs.values())
+        if got:
+            self.inc(got)
+
+
+class DeviceHistogram(Histogram):
+    """Histogram whose bucket counts / sum / max live on device as int32 /
+    f32 arrays, updated by ``observe_device`` with a searchsorted +
+    scatter-add — a handful of lazily-dispatched ops per observation, zero
+    host syncs until ``drain()``."""
+
+    def __init__(self, name: str, buckets: Sequence[float],
+                 help: str = ""):
+        super().__init__(name, buckets, help)
+        # device-key -> (counts[int32, n+1], sum[f32], max[f32]); one
+        # accumulator per device set (see ``_device_key``)
+        self._dev: Dict[Any, Any] = {}
+
+    def observe_device(self, values) -> None:
+        import jax.numpy as jnp
+        v = jnp.asarray(values, jnp.float32).reshape(-1)
+        if v.size == 0:
+            return
+        edges = jnp.asarray(self.edges, jnp.float32)
+        k = _device_key(v)
+        acc = self._dev.get(k)
+        if acc is None:
+            acc = (jnp.zeros((len(self.edges) + 1,), jnp.int32),
+                   jnp.zeros((), jnp.float32),
+                   jnp.full((), -jnp.inf, jnp.float32))
+        counts, total, vmax = acc
+        idx = jnp.searchsorted(edges, v, side="left")
+        self._dev[k] = (counts.at[idx].add(1), total + jnp.sum(v),
+                        jnp.maximum(vmax, jnp.max(v)))
+
+    def drain(self) -> None:
+        if not self._dev:
+            return
+        import jax
+        accs, self._dev = self._dev, {}
+        for acc in accs.values():
+            counts, total, vmax = jax.device_get(acc)  # repro: allow-host-sync
+            n = int(counts.sum())
+            if not n:
+                continue
+            for i, c in enumerate(counts):
+                self.counts[i] += int(c)
+            self.total += n
+            self.sum += float(total)
+            m = float(vmax)
+            if m != float("-inf"):     # -inf = the accumulator's identity
+                self.max = m if self.max is None else max(self.max, m)

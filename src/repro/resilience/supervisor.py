@@ -29,6 +29,8 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs.events import EventLog, default_log
+from repro.obs.registry import MetricsRegistry
 from repro.resilience.faults import FaultSchedule, apply_corruption
 
 
@@ -116,7 +118,9 @@ class SupervisedExecutor:
 
     def __init__(self, executor, *, schedule: Optional[FaultSchedule] = None,
                  policy: Optional[RetryPolicy] = None, ckpt_every: int = 1,
-                 clock=None, sleep=None, strict: bool = True):
+                 clock=None, sleep=None, strict: bool = True,
+                 metrics: Optional[MetricsRegistry] = None,
+                 event_log: Optional[EventLog] = None):
         if not executor.ckpt_dir:
             raise ValueError("SupervisedExecutor needs an executor with "
                              "ckpt_dir: recovery restores from per-stage "
@@ -133,6 +137,18 @@ class SupervisedExecutor:
         self.events: List[tuple] = []
         self.faults_seen: List[tuple] = []
         self.unrecovered: List[tuple] = []
+        # observability (repro.obs): fault/recover/give_up tuples mirror into
+        # the structured event log; health-state flips emit "health" records
+        self.metrics = metrics if metrics is not None \
+            else getattr(executor, "metrics", None) or MetricsRegistry()
+        self.event_log = event_log if event_log is not None else default_log()
+        self._faults_counter = self.metrics.counter(
+            "supervisor_faults_total", help="faults seen, by kind")
+        self._recoveries = self.metrics.counter(
+            "supervisor_recoveries_total",
+            help="successful checkpoint restores after a fault")
+        self._give_ups = self.metrics.counter(
+            "supervisor_give_ups_total", help="stages left unrecovered")
         if schedule is not None:
             hook = schedule.nan_batch_hook()
             if hook is not None:
@@ -142,6 +158,20 @@ class SupervisedExecutor:
 
     def _emit(self, *event) -> None:
         self.events.append(event)
+        kind = event[0]
+        if kind == "fault":
+            self.event_log.emit("fault", fault=event[1], stage=event[2],
+                                tick=event[3])
+            self._faults_counter.inc(1, kind=event[1])
+        elif kind == "recover":
+            self.event_log.emit("recover", stage=event[1], tick=event[2])
+            self._recoveries.inc()
+        elif kind == "give_up":
+            self.event_log.emit("give_up", stage=event[1], why=event[2])
+            self._give_ups.inc()
+        # "tick"/"checkpoint" tuples stay legacy-only: the structured
+        # checkpoint_save records come from checkpoint.checkpoint itself
+        # (emitting here too would double-report every save)
 
     def _duration(self, k: int) -> int:
         return self.ex._duration(k)
@@ -187,6 +217,20 @@ class SupervisedExecutor:
     # -- the supervised loop ----------------------------------------------
 
     def _advance(self, k: int) -> bool:
+        """One visit to stage k (see ``_advance_inner``), with the health
+        state machine's transitions published as structured "health" events
+        — the supervisor's own logic never reads them back."""
+        before = self.health[k].state
+        try:
+            return self._advance_inner(k)
+        finally:
+            # finally: strict-mode give_up raises out of the visit, but the
+            # ok->failed flip must still reach the log
+            after = self.health[k].state
+            if after != before:
+                self.event_log.emit("health", stage=k, old=before, new=after)
+
+    def _advance_inner(self, k: int) -> bool:
         """One visit to stage k: dispatch its next tick, or handle/arm a
         fault.  Returns True when the visit made progress (so the outer
         loop knows whether anyone is merely waiting on a clock)."""

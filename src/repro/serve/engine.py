@@ -38,6 +38,10 @@ import numpy as np
 
 from repro import runtime
 from repro.models import model as M
+from repro.obs.events import EventLog, default_log
+from repro.obs.metrics import DEPTH_BUCKETS, TTFT_MS_BUCKETS
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import TID_LOOP, TID_REQ0, Tracer
 from repro.serve import sampling, staged
 from repro.serve.api import Completion, Request
 from repro.serve.kv_cache import CachePool, place_rows
@@ -52,7 +56,10 @@ class Engine:
                  decode_block: int = 16, plan=None, stage_params=None,
                  policy=None, precision=None,
                  max_queue_wait_ms: Optional[float] = None,
-                 max_cache_tokens: Optional[int] = None, clock=None):
+                 max_cache_tokens: Optional[int] = None, clock=None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 event_log: Optional[EventLog] = None, sleep=None):
         """precision: optional repro.precision preset name or PrecisionPolicy
         — re-dtypes the serving compute path (activations + the slot cache
         pool run in the policy's compute dtype; params keep their storage
@@ -66,7 +73,19 @@ class Engine:
         whose prompt+generation span exceeds this never enters the queue
         (rejected up front), and the grow-only pool is capped at it.
         clock — injectable ``time.monotonic`` substitute (deterministic
-        deadline tests; see ``resilience.FakeClock``)."""
+        deadline tests; see ``resilience.FakeClock``).
+
+        Observability (repro.obs; all optional):
+        metrics — a ``MetricsRegistry``; defaults to a PRIVATE registry so
+        the cumulative-per-engine semantics of the legacy ``stats`` dict
+        are preserved (pass a shared one to aggregate, as loadgen does).
+        tracer — span timelines (request lifecycles on tid 1000+i, the
+        admit/decode driving loop on tid 0); defaults to a fresh ``Tracer``
+        on this engine's clock.
+        event_log — structured event stream shared with the scheduler;
+        defaults to the process-wide ``obs.default_log()``.
+        sleep — injectable ``time.sleep`` substitute, used only by the
+        open-loop ``arrivals=`` path in ``generate``."""
         if precision is not None:
             from repro.precision import get_policy
             cfg = get_policy(precision).apply_to_model(cfg)
@@ -108,10 +127,52 @@ class Engine:
         self.max_queue_wait_ms = max_queue_wait_ms
         self.max_cache_tokens = max_cache_tokens
         self._clock = clock or time.monotonic
-        # degraded-mode telemetry, cumulative across generate() calls
-        self.stats: Dict[str, int] = {"rejected_cache": 0,
-                                      "rejected_queue": 0,
-                                      "rejected_deadline": 0}
+        self._sleep = sleep or time.sleep
+        # observability: per-engine registry (cumulative across generate()
+        # calls, like the legacy stats dict it now backs), spans, events
+        self.tracer = tracer if tracer is not None else Tracer(
+            clock=self._clock)
+        self.event_log = event_log if event_log is not None else default_log()
+        self.bind_metrics(metrics if metrics is not None
+                          else MetricsRegistry())
+
+    def bind_metrics(self, metrics: MetricsRegistry) -> None:
+        """(Re-)home the engine's series in ``metrics``.  Called once from
+        ``__init__``; loadgen calls it again with a fresh registry after its
+        warmup pass, so compile-time TTFTs never pollute the measured
+        distribution."""
+        self.metrics = metrics
+        self._rejected = metrics.counter(
+            "serve_rejected_total",
+            help="requests shed, by reason (cache/queue/deadline)")
+        self._requests = metrics.counter(
+            "serve_requests_total", help="completions, by finish reason")
+        self._tokens = metrics.counter(
+            "serve_tokens_total", help="generated tokens (incl. partial)")
+        self._ttft = metrics.histogram(
+            "serve_ttft_ms", TTFT_MS_BUCKETS,
+            help="submit -> first sampled token, ms")
+        self._queue_depth = metrics.histogram(
+            "serve_queue_depth", DEPTH_BUCKETS,
+            help="wait-queue depth sampled at each decode sync")
+        self._slots_busy = metrics.histogram(
+            "serve_slots_busy", DEPTH_BUCKETS,
+            help="active slots sampled at each decode sync")
+        self._peak_slots = metrics.gauge(
+            "serve_peak_slots_busy", help="max concurrent active slots")
+        self._cache_tokens = metrics.gauge(
+            "serve_cache_tokens", help="cache-pool length, tokens per slot")
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Degraded-mode telemetry, cumulative across ``generate()`` calls.
+
+        Legacy read-through view: the source of truth is now the
+        ``serve_rejected_total`` counter; the dict shape (exactly these
+        three keys) is pinned byte-for-byte in tests."""
+        return {"rejected_cache": self._rejected.value(reason="cache"),
+                "rejected_queue": self._rejected.value(reason="queue"),
+                "rejected_deadline": self._rejected.value(reason="deadline")}
 
     # -- forward fns (plain vs staged) --------------------------------------
 
@@ -245,13 +306,24 @@ class Engine:
     # -- the loop -----------------------------------------------------------
 
     def generate(self, requests: Sequence[Request],
-                 cache_len: Optional[int] = None) -> List[Completion]:
+                 cache_len: Optional[int] = None,
+                 arrivals: Optional[Sequence[float]] = None
+                 ) -> List[Completion]:
         """Continuously-batched generation; completions in request order.
 
         cache_len is a minimum — the engine may serve from a larger pooled
-        cache (validity masks make extra slots inert)."""
+        cache (validity masks make extra slots inert).
+
+        arrivals — optional per-request submission offsets (seconds from
+        call start): open-loop traffic.  Request i is only admissible once
+        the clock passes ``start + arrivals[i]``; the engine sleeps (via
+        the injectable ``sleep``) when all slots are idle and the next
+        arrival is in the future.  ``None`` (default) is the legacy
+        closed-loop path: everything arrives at once."""
         if not requests:
             return []
+        if arrivals is not None and len(arrivals) != len(requests):
+            raise ValueError("arrivals must align 1:1 with requests")
         n_slots = self.max_slots
         extra = self.cfg.vision_tokens if self.cfg.frontend == "vision" else 0
 
@@ -260,6 +332,7 @@ class Engine:
                 + r.gen.max_new_tokens + extra
 
         def completion(r, tokens, reason) -> Completion:
+            self._requests.inc(1, reason=reason)
             return Completion(
                 id=r.id,
                 prompt_tokens=tuple(int(t) for t in
@@ -267,23 +340,28 @@ class Engine:
                 tokens=tokens, finish_reason=reason)
 
         sched = self.scheduler = Scheduler(
-            n_slots, max_queue_wait_ms=self.max_queue_wait_ms)
+            n_slots, max_queue_wait_ms=self.max_queue_wait_ms,
+            event_log=self.event_log)
         done: Dict[int, Completion] = {}
         accepted: List[Request] = []
         now0 = self._clock()
+        self.event_log.emit("generate_begin", n=len(requests))
         for i, r in enumerate(requests):
             if self.max_cache_tokens is not None \
                     and span(r) > self.max_cache_tokens:
                 # cache-pressure admission control: this request could never
                 # fit a slot of the capped pool — shed it up front, loudly
                 done[i] = completion(r, (), "rejected")
-                self.stats["rejected_cache"] += 1
+                self._rejected.inc(1, reason="cache")
+                self.event_log.emit("reject", req=i)
             elif r.gen.max_new_tokens <= 0:    # prefill-only: nothing to emit
                 done[i] = completion(r, (), "length")
             else:
-                sched.submit(i, r, now0)
+                t = now0 + (arrivals[i] if arrivals is not None else 0.0)
+                sched.submit(i, r, t)
                 accepted.append(r)
         if not accepted:
+            self.event_log.emit("generate_end", n=len(requests))
             return [done[i] for i in range(len(requests))]
         # pools are reusable without zeroing: admission fully overwrites a
         # slot before it decodes, and free slots never reach a Completion
@@ -303,12 +381,22 @@ class Engine:
         # otherwise shed() stays a no-op and the loop is the legacy loop
         shedding = self.max_queue_wait_ms is not None or any(
             r.deadline_ms is not None for r in accepted)
+        open_loop = arrivals is not None
+        admit_t: Dict[int, float] = {}       # req_idx -> admission walltime
 
         def finish(slot: int, reason: str) -> None:
             st = sched.retire(slot)
             st.finish_reason = reason
             done[st.req_idx] = completion(st.request, tuple(st.emitted),
                                           reason)
+            self._tokens.inc(len(st.emitted))
+            t_adm = admit_t.pop(st.req_idx, None)
+            if t_adm is not None:
+                self.tracer.add_span(
+                    f"req {st.req_idx} active", t_adm,
+                    self._clock() - t_adm, cat="request",
+                    tid=TID_REQ0 + st.req_idx, reason=reason,
+                    tokens=len(st.emitted))
 
         def shed() -> None:
             """Degraded mode: reject what can no longer be served in time —
@@ -319,10 +407,12 @@ class Engine:
             now = self._clock()
             for req_idx, r in sched.expire_queued(now):
                 done[req_idx] = completion(r, (), "rejected")
-                self.stats["rejected_queue"] += 1
+                self._rejected.inc(1, reason="queue")
+                self.tracer.instant(f"req {req_idx} shed", ts=now,
+                                    cat="request", tid=TID_REQ0 + req_idx)
             for slot in sched.overdue_active(now):
                 finish(slot, "rejected")
-                self.stats["rejected_deadline"] += 1
+                self._rejected.inc(1, reason="deadline")
 
         def admit_group(items) -> None:
             """Admit same-prompt-length requests via ONE jitted batched
@@ -330,17 +420,28 @@ class Engine:
             nonlocal tok, pos, keys, temps, tks, tps
             reqs = [r for _, r, _ in items]
             batch = self._request_batch(reqs)
+            t_adm = self._clock()
             slots = [sched.admit(i, r, batch["tokens"].shape[1], arrival=t)
                      for i, r, t in items]
+            for i, _, t in items:
+                admit_t[i] = t_adm
+                self.tracer.add_span(f"req {i} queued", t, t_adm - t,
+                                     cat="request", tid=TID_REQ0 + i)
             step = self._admit_step(batch["tokens"].shape, cache_len, mode)
-            pool.cache, tok, pos, keys, temps, tks, tps, t0 = step(
-                self.params, batch, pool.cache, tok, pos, keys, temps, tks,
-                tps, jnp.asarray(slots, jnp.int32),
-                jnp.asarray([r.gen.seed for r in reqs], jnp.uint32),
-                jnp.asarray([r.gen.temperature for r in reqs], jnp.float32),
-                jnp.asarray([r.gen.top_k for r in reqs], jnp.int32),
-                jnp.asarray([r.gen.top_p for r in reqs], jnp.float32))
-            t0h = np.asarray(t0)
+            with self.tracer.span("admit", cat="serve", tid=TID_LOOP,
+                                  batch=len(reqs)):
+                pool.cache, tok, pos, keys, temps, tks, tps, t0 = step(
+                    self.params, batch, pool.cache, tok, pos, keys, temps,
+                    tks, tps, jnp.asarray(slots, jnp.int32),
+                    jnp.asarray([r.gen.seed for r in reqs], jnp.uint32),
+                    jnp.asarray([r.gen.temperature for r in reqs],
+                                jnp.float32),
+                    jnp.asarray([r.gen.top_k for r in reqs], jnp.int32),
+                    jnp.asarray([r.gen.top_p for r in reqs], jnp.float32))
+                t0h = np.asarray(t0)     # the sync: first tokens are real
+            now = self._clock()
+            for _, _, t in items:        # TTFT measured at the sync point
+                self._ttft.observe((now - t) * 1000.0)
             for row, (slot, (i, r, _)) in enumerate(zip(slots, items)):
                 g = r.gen
                 sched.active[slot].emitted.append(int(t0h[row]))
@@ -350,8 +451,11 @@ class Engine:
                     finish(slot, "length")
 
         def admit_ready() -> None:
+            now = self._clock() if open_loop else None
             while sched.queued() and sched.free:
-                take = sched.take(len(sched.free))
+                take = sched.take(len(sched.free), now=now)
+                if not take:         # head of queue hasn't arrived yet
+                    break
                 groups: Dict[int, list] = {}
                 for i, r, t in take:
                     plen = np.asarray(r.tokens).reshape(-1).shape[0]
@@ -361,12 +465,28 @@ class Engine:
 
         shed()
         admit_ready()
-        while sched.active:
+        while sched.active or sched.queued():
+            if not sched.active:
+                # open-loop idle: nothing in flight and the next arrival is
+                # still in the future — sleep the gap (injectable) and retry
+                na = sched.next_arrival()
+                if na is None:
+                    break
+                gap = na - self._clock()
+                if gap > 0:
+                    self._sleep(gap)
+                shed()
+                admit_ready()
+                continue
+            self._queue_depth.observe(sched.queued())
+            self._slots_busy.observe(len(sched.active))
             n = self._chunk_len(sched.min_remaining())
             step = self._decode_chunk(n, mode)
-            pool.cache, tok, pos, keys, toks = step(
-                self.params, pool.cache, tok, pos, keys, temps, tks, tps)
-            toks_h = np.asarray(toks)                      # (n, n_slots)
+            with self.tracer.span(f"decode[{n}]", cat="serve", tid=TID_LOOP,
+                                  active=len(sched.active)):
+                pool.cache, tok, pos, keys, toks = step(
+                    self.params, pool.cache, tok, pos, keys, temps, tks, tps)
+                toks_h = np.asarray(toks)                  # (n, n_slots)
             for slot in list(sched.active):
                 st = sched.active[slot]
                 eos = st.request.gen.eos_id
@@ -380,4 +500,9 @@ class Engine:
                         break
             shed()
             admit_ready()
+        self._peak_slots.set_max(sched.max_concurrent)
+        self._cache_tokens.set(pool.cache_len)
+        self.metrics.drain()         # flush boundary (idempotent, host-only)
+        self.event_log.emit("generate_end", n=len(requests),
+                            completed=len(done))
         return [done[i] for i in range(len(requests))]

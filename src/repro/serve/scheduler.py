@@ -13,12 +13,20 @@ outwaited ``max_queue_wait_ms`` or its own ``deadline_ms`` is REJECTED
 (audited ``("reject", req_idx)`` event) instead of leaking in a stalled
 engine.  With no deadlines configured the queue is plain FIFO and the
 event stream is exactly the legacy admit/retire sequence.
+
+Observability (repro.obs): every audited transition is mirrored into the
+structured ``event_log`` exactly once, at the same site the legacy tuple
+is appended — ``admit``/``retire`` records carry ``slot`` (+ ``req``),
+``reject`` records carry ``req``.  The legacy ``events`` tuple list is
+unchanged; tests pin the one-to-one mapping.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from repro.obs.events import EventLog, default_log
 
 
 @dataclass
@@ -41,13 +49,15 @@ class Scheduler:
     reject on queue timeout / missed deadline."""
 
     def __init__(self, n_slots: int, *,
-                 max_queue_wait_ms: Optional[float] = None):
+                 max_queue_wait_ms: Optional[float] = None,
+                 event_log: Optional[EventLog] = None):
         self.n_slots = n_slots
         self.max_queue_wait_ms = max_queue_wait_ms
         self.free: List[int] = list(range(n_slots))
         self.active: Dict[int, SlotState] = {}
         self.queue: Deque[Tuple[int, Any, float]] = deque()
         self.events: List[Tuple[str, int]] = []
+        self.event_log = event_log if event_log is not None else default_log()
         self.max_concurrent = 0
 
     # -- queue -------------------------------------------------------------
@@ -61,12 +71,21 @@ class Scheduler:
     def queued(self) -> int:
         return len(self.queue)
 
-    def take(self, n: int) -> List[Tuple[int, Any, float]]:
-        """Pop up to ``n`` queued entries in arrival order."""
+    def take(self, n: int,
+             now: Optional[float] = None) -> List[Tuple[int, Any, float]]:
+        """Pop up to ``n`` queued entries in arrival order.  With ``now``
+        (open-loop traffic), stop at the first entry whose stamped
+        submission time is still in the future — it hasn't arrived yet."""
         out: List[Tuple[int, Any, float]] = []
         while self.queue and len(out) < n:
+            if now is not None and self.queue[0][2] > now:
+                break
             out.append(self.queue.popleft())
         return out
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest stamped submission time still queued (None if empty)."""
+        return min((t for _, _, t in self.queue), default=None)
 
     def expire_queued(self, now: float) -> List[Tuple[int, Any]]:
         """Drop every queued request that has outwaited the queue limit or
@@ -82,6 +101,7 @@ class Scheduler:
                     or (deadline is not None and waited_ms > deadline):
                 rejected.append((req_idx, request))
                 self.events.append(("reject", req_idx))
+                self.event_log.emit("reject", req=req_idx)
             else:
                 kept.append((req_idx, request, t))
         self.queue = kept
@@ -106,6 +126,7 @@ class Scheduler:
         self.active[slot] = SlotState(req_idx, request, n_prompt,
                                       arrival=arrival)
         self.events.append(("admit", slot))
+        self.event_log.emit("admit", slot=slot, req=req_idx)
         self.max_concurrent = max(self.max_concurrent, len(self.active))
         self._check()
         return slot
@@ -114,6 +135,7 @@ class Scheduler:
         st = self.active.pop(slot)
         self.free.append(slot)
         self.events.append(("retire", slot))
+        self.event_log.emit("retire", slot=slot, req=st.req_idx)
         self._check()
         return st
 

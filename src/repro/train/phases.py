@@ -468,7 +468,8 @@ class ParallelSilPhase(PhaseBase):
                            opts, hps, seed_base=self.seed_base,
                            shuffle=self.shuffle, ckpt_dir=self.ckpt_dir,
                            ckpt_every=self.ckpt_every,
-                           ckpt_keep_last=self.ckpt_keep_last)
+                           ckpt_keep_last=self.ckpt_keep_last,
+                           metrics=trainer.metrics, tracer=trainer.tracer)
         if be.kind == "mlp":
             n_ticks = max(hp.epochs for hp in hps)
         else:

@@ -23,6 +23,9 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import LOSS_BUCKETS
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import TID_LOOP, Tracer
 from repro.optim import read_skipped
 from repro.train.backends import scanned_epoch_fn
 from repro.train.history import History
@@ -49,9 +52,26 @@ class TrainState:
 class Trainer:
     """Runs any phase sequence over an MLP or transformer backend."""
 
-    def __init__(self, backend, spec):
+    def __init__(self, backend, spec, *,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
+        """metrics/tracer (repro.obs, optional): a ``MetricsRegistry`` for
+        the trainer's series (defaults to a private one) and a ``Tracer``
+        for phase spans.  The loss histogram is **device-resident** — loop
+        drivers observe the device scalars the step already returns (a few
+        lazily-dispatched ops, no sync) and it drains only at the flush
+        boundaries the loop already has (``flush_losses`` / end of
+        ``run``)."""
         self.backend = backend
         self.spec = spec
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer()
+        self._loss_hist = self.metrics.device_histogram(
+            "train_loss", LOSS_BUCKETS,
+            help="per-step training loss (device-accumulated)")
+        self._skipped = self.metrics.counter(
+            "train_skipped_steps_total",
+            help="NaN/inf-guarded optimizer steps skipped, by phase[stage]")
 
     def run(self, phases: Sequence, *, params, sils: Optional[list] = None,
             key=None):
@@ -70,13 +90,21 @@ class Trainer:
                            sils=sils or [])
         if getattr(self.backend, "dropped_per_epoch", 0):
             # tail-drop is silent no more: surface it in every history
+            # AND in the metrics schema (satellite of history.meta)
             state.history.meta["dropped_per_epoch"] = \
                 self.backend.dropped_per_epoch
+            self.metrics.gauge(
+                "train_dropped_per_epoch",
+                help="samples tail-dropped per epoch by batching").set(
+                    self.backend.dropped_per_epoch)
         for phase in phases:
-            phase.run(self, state)
+            with self.tracer.span(type(phase).__name__, cat="phase",
+                                  tid=TID_LOOP):
+                phase.run(self, state)
         for cache in state.boundary.values():
             if hasattr(cache, "close"):
                 cache.close()
+        self.metrics.drain()     # end-of-run flush boundary (idempotent)
         return self.backend.join(state.stage_params), state.history
 
     # ------------------------------------------------------------------
@@ -109,8 +137,10 @@ class Trainer:
         eval_every = be.spec.eval_every
         for ep in range(epochs):
             batches = batch_arrays(ep)
-            train_params, opt_state, _ = epoch_fn(train_params, opt_state,
-                                                  batches)
+            train_params, opt_state, losses = epoch_fn(train_params,
+                                                       opt_state, batches)
+            # device-side: bucket the epoch's per-batch losses without a sync
+            self._loss_hist.observe_device(losses)
             n_samples = batches[0].shape[0] * batches[0].shape[1]
             state.cum_macs += macs_per_sample * n_samples
             log = (log_mode == "every"
@@ -133,6 +163,7 @@ class Trainer:
             args = inputs_fn(state.step_idx)
             train_params, opt_state, loss = step(train_params, opt_state,
                                                  *args)
+            self._loss_hist.observe_device(loss)
             pending.append(loss)
             steps_logged.append(state.step_idx)
             if advance_global:
@@ -158,8 +189,12 @@ class Trainer:
         per_phase = state.history.meta.setdefault("skipped_steps", {})
         key = f"{phase_name}[{stage}]"
         # counters are cumulative per opt_state; record the high-water mark
-        # so replayed/repeated reads of the same state don't double-count
-        per_phase[key] = max(per_phase.get(key, 0), skipped)
+        # so replayed/repeated reads of the same state don't double-count —
+        # the metrics counter advances by the same high-water delta
+        prev = per_phase.get(key, 0)
+        if skipped > prev:
+            self._skipped.inc(skipped - prev, phase=key)
+        per_phase[key] = max(prev, skipped)
         state.skipped_steps = sum(per_phase.values())
         budget = getattr(self.spec, "max_skipped_steps", None)
         if budget is not None and state.skipped_steps > budget:
@@ -200,3 +235,6 @@ class Trainer:
             else [phase_name] * len(pending)
         for name, st, i, v in zip(names, stages, steps_logged, values):
             state.history.log(phase=name, stage=st, step=i, loss=float(v))
+        # this is already a sanctioned sync point — drain the device-resident
+        # metrics accumulated since the last flush (idempotent)
+        self.metrics.drain()
