@@ -47,6 +47,12 @@ def build_plans(ctx: AnalysisContext) -> List[KernelPlan]:
         plans.append(fa.plan(b, s, s, cfg.n_heads, cfg.n_kv_heads, cfg.hd))
         plans.append(fa.decode_plan(4, s + 32, cfg.n_heads, cfg.n_kv_heads,
                                     cfg.hd))
+        # paged decode: the block-table scalar prefetch is exercised at its
+        # 0 / max_value fills by index_map_bounds
+        nb = -(-(s + 32) // 16)
+        plans.append(fa.paged_decode_plan(4, nb, 16, cfg.n_heads,
+                                          cfg.n_kv_heads, cfg.hd,
+                                          n_blocks=4 * nb + 1))
         if cfg.ssm is not None:
             plans.append(ssm.plan(b, s, cfg.ssm.expand * cfg.d_model,
                                   cfg.ssm.d_state))

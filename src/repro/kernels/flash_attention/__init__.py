@@ -1,1 +1,1 @@
-from .ops import flash_attention, decode_attention  # noqa: F401
+from .ops import flash_attention, decode_attention, paged_decode_attention  # noqa: F401

@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.plan import (BlockPlan, KernelPlan, ScratchPlan,
-                                as_block_spec, as_scratch)
+from repro.kernels.plan import (BlockPlan, KernelPlan, ScalarPrefetchPlan,
+                                ScratchPlan, as_block_spec, as_scratch)
 
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
@@ -94,6 +94,51 @@ def decode_plan(b, lc, h, kv, d, *, bk=DEFAULT_BK,
         ),
         outputs=(
             BlockPlan("o", (1, 1, g, d), lambda b_, kv_, ik: (b_, kv_, 0, 0),
+                      (b, kv, g, d), dtype),
+        ),
+        scratch=(
+            ScratchPlan("m", (g,), "float32", accumulator=True),
+            ScratchPlan("l", (g,), "float32", accumulator=True),
+            ScratchPlan("acc", (g, d), "float32", accumulator=True),
+        ),
+    )
+
+
+def paged_decode_plan(b, nb, bs, h, kv, d, *, n_blocks,
+                      dtype="float32") -> KernelPlan:
+    """Launch geometry for ``paged_decode_attention_tpu``: q:(b,1,h,d) over
+    (n_blocks, bs, kv, d) physical K/V blocks, gathered through a
+    scalar-prefetched (b, nb) block table.
+
+    The grid's minor axis walks the request's nb LOGICAL blocks; the K/V
+    index maps read the prefetched table to aim each DMA at the mapped
+    PHYSICAL block — the gathered logical cache never exists in HBM.  The
+    static checker bounds the maps with the table filled at 0 and at
+    ``n_blocks - 1`` (the garbage block and the last physical block)."""
+    g = h // kv
+    return KernelPlan(
+        family="flash_attention", entry="paged_decode_attention",
+        grid=(b, kv, nb),
+        scalar_prefetch=(
+            ScalarPrefetchPlan("block_tables", (b, nb), "int32",
+                               max_value=n_blocks - 1),
+        ),
+        inputs=(
+            BlockPlan("pos", (1,), lambda b_, kv_, ik, bt_ref: (b_,), (b,),
+                      "int32", memory_space="smem"),
+            BlockPlan("q", (1, 1, g, d),
+                      lambda b_, kv_, ik, bt_ref: (b_, kv_, 0, 0),
+                      (b, kv, g, d), dtype),
+            BlockPlan("k", (1, 1, bs, d),
+                      lambda b_, kv_, ik, bt_ref: (bt_ref[b_, ik], kv_, 0, 0),
+                      (n_blocks, kv, bs, d), dtype),
+            BlockPlan("v", (1, 1, bs, d),
+                      lambda b_, kv_, ik, bt_ref: (bt_ref[b_, ik], kv_, 0, 0),
+                      (n_blocks, kv, bs, d), dtype),
+        ),
+        outputs=(
+            BlockPlan("o", (1, 1, g, d),
+                      lambda b_, kv_, ik, bt_ref: (b_, kv_, 0, 0),
                       (b, kv, g, d), dtype),
         ),
         scratch=(
@@ -265,4 +310,63 @@ def decode_attention_tpu(q, k_cache, v_cache, pos, *, window=0,
         scratch_shapes=[as_scratch(sp) for sp in kp.scratch],
         interpret=interpret,
     )(pos_b, qt, kt, vt)
+    return out.reshape(b, 1, h, d)
+
+
+def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale, bs, lc):
+    """Block-paged decode: identical online-softmax math to
+    ``_decode_kernel`` — the block table is consumed entirely by the K/V
+    index maps (scalar prefetch), so the kernel body only needs the grid's
+    logical-block step to reconstruct slot ids."""
+    del bt_ref  # routing happened in the index maps
+    _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, scale=scale, bk=bs, lc=lc)
+
+
+@functools.partial(jax.jit, static_argnames=("logical_len", "window",
+                                             "interpret"))
+def paged_decode_attention_tpu(q, k_pages, v_pages, block_tables, pos, *,
+                               logical_len, window=0, interpret=None):
+    """Single-token decode over a block-paged KV cache.
+
+    q: (B, 1, H, D); k/v_pages: (NB_phys, BS, KV, D); block_tables: (B, nb)
+    int32 physical block ids (garbage-padded); logical_len: true logical
+    cache length (the validity mask `slot < logical_len` covers both the
+    block pad and the ring modulus).  The table is scalar-prefetched so the
+    per-block DMAs gather physical blocks directly — the contiguous logical
+    view never materializes.  `window` only affects cache LAYOUT (ring),
+    not the mask — signature parity with the ref.  Returns (B, 1, H, D).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    b, _, h, d = q.shape
+    n_blocks, bs, kv = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    g = h // kv
+    scale = d ** -0.5
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kp = paged_decode_plan(b, nb, bs, h, kv, d, n_blocks=n_blocks,
+                           dtype=str(q.dtype))
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    qt = q[:, 0].reshape(b, kv, g, d)                    # (B, KV, G, D)
+    kt = k_pages.transpose(0, 2, 1, 3)                   # (NB, KV, BS, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, bs=bs,
+                               lc=logical_len)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(kp.scalar_prefetch),
+        grid=kp.grid,
+        in_specs=[as_block_spec(bp) for bp in kp.inputs],
+        out_specs=as_block_spec(kp.outputs[0]),
+        scratch_shapes=[as_scratch(sp) for sp in kp.scratch],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(kp.outputs[0].array_shape, q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos_b, qt, kt, vt)
     return out.reshape(b, 1, h, d)

@@ -31,3 +31,21 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0):
         from .kernel import decode_attention_tpu
         return decode_attention_tpu(q, k_cache, v_cache, pos, window=window)
     return ref.decode_attention(q, k_cache, v_cache, pos, window=window)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
+                           logical_len, window=0):
+    """Single-token decode gathering K/V through a per-request block table.
+
+    k/v_pages: (NB_phys, BS, KV, D); block_tables: (B, nb) int32.  The Pallas
+    path scalar-prefetches the table so each K/V block DMA reads the physical
+    block directly; the ref path gathers the logical view and defers to
+    ``decode_attention``."""
+    if decide("flash_attention", k_pages.shape, q.dtype).use_pallas:
+        from .kernel import paged_decode_attention_tpu
+        return paged_decode_attention_tpu(
+            q, k_pages, v_pages, block_tables, pos,
+            logical_len=logical_len, window=window)
+    return ref.paged_decode_attention(
+        q, k_pages, v_pages, block_tables, pos,
+        logical_len=logical_len, window=window)

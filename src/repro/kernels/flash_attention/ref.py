@@ -103,6 +103,28 @@ def chunked_attention(q, k, v, *, causal=True, window=0, chunk=512, scale=None):
     return out.astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
+                           logical_len, window=0, scale=None):
+    """Single-token decode over a block-paged KV cache.
+
+    q: (B, 1, H, D); k/v_pages: (NB_phys, BS, KV, D) physical token blocks;
+    block_tables: (B, nb) int32 physical ids per logical block (garbage-
+    padded past the allocation); logical_len: the true per-request cache
+    length (the ring modulus when window > 0 — storage pads up to whole
+    blocks, and this slice masks the pad).  Gathers the logical view and
+    reuses ``decode_attention``'s exact masking math, so paged == contiguous
+    is bitwise on the gathered values.
+    """
+    b = q.shape[0]
+    nb = block_tables.shape[1]
+    bs = k_pages.shape[1]
+    kc = k_pages[block_tables].reshape(
+        b, nb * bs, *k_pages.shape[2:])[:, :logical_len]
+    vc = v_pages[block_tables].reshape(
+        b, nb * bs, *v_pages.shape[2:])[:, :logical_len]
+    return decode_attention(q, kc, vc, pos, window=window, scale=scale)
+
+
 def decode_attention(q, k_cache, v_cache, pos, *, window=0, scale=None):
     """Single-token decode attention over a (possibly ring-buffered) cache.
 

@@ -24,7 +24,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention, decode_attention
+from repro.kernels.flash_attention import (flash_attention, decode_attention,
+                                           paged_decode_attention)
 from repro.kernels.selective_scan import selective_scan, selective_scan_step
 
 
@@ -185,11 +186,16 @@ def attention_apply(p, x, cfg, *, rope_cs=None, causal=True, window=0,
 
 
 def attention_decode(p, x, cfg, cache_kv, pos, *, rope_cs=None, window=0,
-                     cross_kv=None):
-    """One-token decode. x: (B,1,d). cache_kv: (k,v) each (B,Lc,KV,hd).
+                     cross_kv=None, paged=None):
+    """One-token decode. x: (B,1,d). cache_kv: (k,v) each (B,Lc,KV,hd) —
+    or, when ``paged`` is set, physical block pools (NB,BS,KV,hd).
 
     pos: scalar int32 OR per-request (B,) vector (ragged batches — each
     request writes its own cache slot and masks its own history).
+    paged: optional ``(block_tables, logical_len)`` — block_tables (B,nb)
+    int32, logical_len the static logical cache length (the ring modulus
+    when window>0; free/pad table entries point at the garbage block, which
+    is written but never read thanks to the ``slot < logical_len`` mask).
     Returns (out, new_cache_kv). For cross attention pass cross_kv
     (precomputed encoder k/v) and cache_kv=None.
     """
@@ -208,8 +214,19 @@ def attention_decode(p, x, cfg, cache_kv, pos, *, rope_cs=None, window=0,
         q = rope_apply(q, cos, sin, per_batch=per_batch)
         k = rope_apply(k, cos, sin, per_batch=per_batch)
     kc, vc = cache_kv
-    lc = kc.shape[1]
     pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    if paged is not None:
+        bt, lc = paged
+        bs = kc.shape[1]
+        slot = (pos_b % lc) if window else jnp.minimum(pos_b, lc - 1)
+        phys = bt[jnp.arange(b), slot // bs]
+        off = slot % bs
+        kc = kc.at[phys, off].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[phys, off].set(v[:, 0].astype(vc.dtype))
+        out = paged_decode_attention(q, kc, vc, bt, pos,
+                                     logical_len=lc, window=window)
+        return dense(p["wo"], out.reshape(*x.shape[:2], -1)), (kc, vc)
+    lc = kc.shape[1]
     slot = (pos_b % lc) if window else jnp.minimum(pos_b, lc - 1)
     kc = kc.at[jnp.arange(b), slot].set(k[:, 0].astype(kc.dtype))
     vc = vc.at[jnp.arange(b), slot].set(v[:, 0].astype(vc.dtype))

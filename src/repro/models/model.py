@@ -227,15 +227,20 @@ def _apply_slot_full(cfg, sp, kind, is_moe, has_ffn, x, rope_cs, enc_out,
 
 
 def _apply_slot_decode(cfg, sp, kind, is_moe, has_ffn, x, rope_cs, pos,
-                       cache_slot):
-    """One-token slot application with cache update."""
+                       cache_slot, paged=None):
+    """One-token slot application with cache update.
+
+    paged: optional ``(block_tables, logical_len)`` routing the attention
+    K/V through a block-paged pool (see ``layers.attention_decode``); all
+    other slot kinds stay slot-resident and ignore it.
+    """
     h = L.norm_apply(sp["norm1"], x)
     window = cfg.sliding_window
     new_cache = dict(cache_slot)
     if kind == "attn":
         out, (kc, vc) = L.attention_decode(
             sp["attn"], h, cfg, (cache_slot["k"], cache_slot["v"]), pos,
-            rope_cs=rope_cs, window=window)
+            rope_cs=rope_cs, window=window, paged=paged)
         new_cache["k"], new_cache["v"] = kc, vc
     elif kind == "mamba":
         out, st = L.mamba_decode(sp["mamba"], h, cfg,
@@ -445,11 +450,14 @@ def decode_embed(cfg, params, token, pos):
     return x, rope_cs
 
 
-def decode_groups(cfg, groups_params, cache, x, rope_cs, pos):
+def decode_groups(cfg, groups_params, cache, x, rope_cs, pos, paged=None):
     """One decode step over a (sub)stack of layer groups.
 
     groups_params / cache are stacked over the same leading group dim (the
-    whole model, or one PartitionPlan stage's slice).  Returns (x, new_cache).
+    whole model, or one PartitionPlan stage's slice).  With ``paged``, the
+    attention K/V leaves are (G, NB, BS, KV, hd) physical block pools and
+    the one block table (a scan constant, shared across groups) routes each
+    request's reads/writes.  Returns (x, new_cache).
     """
     slots = slot_spec(cfg)
 
@@ -459,21 +467,23 @@ def decode_groups(cfg, groups_params, cache, x, rope_cs, pos):
         for i, (kind, is_moe, has_ffn) in enumerate(slots):
             x, nc = _apply_slot_decode(cfg, pgroup[f"slot_{i}"], kind, is_moe,
                                        has_ffn, x, rope_cs, pos,
-                                       cache_g[f"slot_{i}"])
+                                       cache_g[f"slot_{i}"], paged=paged)
             new_cache_g[f"slot_{i}"] = nc
         return x, new_cache_g
 
     return jax.lax.scan(body, x, (groups_params, cache))
 
 
-def decode_step(cfg, params, cache, token, pos):
+def decode_step(cfg, params, cache, token, pos, paged=None):
     """One decode step. token: (B,) int32; pos: scalar int32 OR per-request
     (B,) int32 vector (ragged batches: each request at its own position).
 
+    paged: optional ``(block_tables, logical_len)`` for block-paged K/V.
     Returns (logits (B,V), new_cache).
     """
     x, rope_cs = decode_embed(cfg, params, token, pos)
-    x, new_cache = decode_groups(cfg, params["groups"], cache, x, rope_cs, pos)
+    x, new_cache = decode_groups(cfg, params["groups"], cache, x, rope_cs,
+                                 pos, paged=paged)
     x = L.norm_apply(params["final_norm"], x)
     logits = unembed(cfg, params, x)[:, 0]
     return logits, new_cache

@@ -140,6 +140,7 @@ class Histogram(Metric):
         self.total = 0
         self.sum = 0.0
         self.max: Optional[float] = None
+        self.min: Optional[float] = None
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -147,6 +148,7 @@ class Histogram(Metric):
         self.total += 1
         self.sum += v
         self.max = v if self.max is None else max(self.max, v)
+        self.min = v if self.min is None else min(self.min, v)
 
     @property
     def mean(self) -> Optional[float]:
@@ -155,9 +157,14 @@ class Histogram(Metric):
     def percentile(self, q: float) -> Optional[float]:
         """Bucket-interpolated percentile (None when empty).
 
-        Error bound: the width of the covering bucket — the underflow
-        bucket reports ``edges[0]`` and the overflow bucket ``max`` (the
-        tracked maximum), since those buckets have one open end."""
+        Error bound: the width of the covering bucket.  The open-ended
+        buckets substitute the tracked extrema for their missing edge: the
+        underflow bucket interpolates from ``min`` up to
+        ``min(edges[0], max)`` (every observation may sit far below
+        ``edges[0]`` — sub-ms TTFTs under a 1 ms first edge — so reporting
+        ``edges[0]`` could exceed the true maximum), and the overflow
+        bucket reports ``max``.  The estimate is always within
+        ``[min, max]``."""
         if not self.total:
             return None
         target = (q / 100.0) * self.total
@@ -166,22 +173,30 @@ class Histogram(Metric):
             if not c:
                 continue
             if cum + c >= target:
-                if i == 0:
-                    return self.edges[0]
                 if i == len(self.edges):
                     return self.max
-                lo, hi = self.edges[i - 1], self.edges[i]
+                if i == 0:
+                    lo = self.edges[0] if self.min is None else self.min
+                    hi = self.edges[0] if self.max is None \
+                        else min(self.edges[0], self.max)
+                else:
+                    lo, hi = self.edges[i - 1], self.edges[i]
                 est = lo + (hi - lo) * (target - cum) / c
-                # interpolation can overshoot the tracked maximum inside
-                # the covering bucket; the max is a tighter upper bound
-                return est if self.max is None else min(est, self.max)
+                # interpolation can overshoot the tracked extrema inside
+                # the covering bucket; they are tighter bounds
+                if self.max is not None:
+                    est = min(est, self.max)
+                if self.min is not None:
+                    est = max(est, self.min)
+                return est
             cum += c
         return self.max
 
     def summary(self) -> Dict[str, Any]:
         return {"count": self.total, "sum": self.sum, "mean": self.mean,
-                "max": self.max, "p50": self.percentile(50),
-                "p90": self.percentile(90), "p99": self.percentile(99)}
+                "max": self.max, "min": self.min,
+                "p50": self.percentile(50), "p90": self.percentile(90),
+                "p99": self.percentile(99)}
 
     def rows(self):
         yield {"name": self.name, "kind": self.kind, "labels": {},
@@ -244,11 +259,13 @@ class DeviceHistogram(Histogram):
         if acc is None:
             acc = (jnp.zeros((len(self.edges) + 1,), jnp.int32),
                    jnp.zeros((), jnp.float32),
-                   jnp.full((), -jnp.inf, jnp.float32))
-        counts, total, vmax = acc
+                   jnp.full((), -jnp.inf, jnp.float32),
+                   jnp.full((), jnp.inf, jnp.float32))
+        counts, total, vmax, vmin = acc
         idx = jnp.searchsorted(edges, v, side="left")
         self._dev[k] = (counts.at[idx].add(1), total + jnp.sum(v),
-                        jnp.maximum(vmax, jnp.max(v)))
+                        jnp.maximum(vmax, jnp.max(v)),
+                        jnp.minimum(vmin, jnp.min(v)))
 
     def drain(self) -> None:
         if not self._dev:
@@ -256,7 +273,7 @@ class DeviceHistogram(Histogram):
         import jax
         accs, self._dev = self._dev, {}
         for acc in accs.values():
-            counts, total, vmax = jax.device_get(acc)  # repro: allow-host-sync
+            counts, total, vmax, vmin = jax.device_get(acc)  # repro: allow-host-sync
             n = int(counts.sum())
             if not n:
                 continue
@@ -265,5 +282,8 @@ class DeviceHistogram(Histogram):
             self.total += n
             self.sum += float(total)
             m = float(vmax)
-            if m != float("-inf"):     # -inf = the accumulator's identity
+            if m != float("-inf"):     # ±inf = the accumulators' identities
                 self.max = m if self.max is None else max(self.max, m)
+            lo = float(vmin)
+            if lo != float("inf"):
+                self.min = lo if self.min is None else min(self.min, lo)

@@ -1,8 +1,9 @@
 """`repro.serve` — the serving counterpart of `repro.train`.
 
 A typed request/response API fronted by an ``Engine`` that owns the params,
-a slot-based KV/state cache pool, a continuous-batching scheduler, and a
-fused decode+sample inner loop:
+a KV/state cache pool (contiguous slots, or block-paged with shared-prefix
+reuse via ``paged=True``), a continuous-batching scheduler, and a fused
+decode+sample inner loop:
 
     from repro.serve import Engine, GenerationConfig, Request
 
@@ -14,17 +15,23 @@ fused decode+sample inner loop:
                                                     top_p=0.95, seed=7)),
     ])
 
+    for ev in engine.stream(reqs):          # per-token streaming deltas
+        ...
+
 Pass ``plan=``/``stage_params=`` to serve the paper's partitions as
 deployable stages, and ``policy=`` to route through the production-mesh
 sharding plumbing.
 """
-from repro.serve.api import Completion, GenerationConfig, Request
+from repro.serve.api import (Completion, GenerationConfig, Request,
+                             StreamEvent)
 from repro.serve.engine import Engine
-from repro.serve.kv_cache import CachePool
+from repro.serve.kv_cache import (BlockAllocator, CachePool, PagedAlloc,
+                                  PagedCachePool)
 from repro.serve.scheduler import Scheduler, SlotState
 from repro.serve.staged import staged_decode_step, staged_prefill
 
 __all__ = [
-    "Completion", "GenerationConfig", "Request", "Engine", "CachePool",
+    "Completion", "GenerationConfig", "Request", "StreamEvent", "Engine",
+    "CachePool", "BlockAllocator", "PagedAlloc", "PagedCachePool",
     "Scheduler", "SlotState", "staged_decode_step", "staged_prefill",
 ]

@@ -51,6 +51,23 @@ class Request:
 
 
 @dataclass(frozen=True)
+class StreamEvent:
+    """One increment from ``Engine.stream``.
+
+    kind == "delta": ``token`` is the next generated token of request
+    ``req_idx`` (deltas for one request arrive in order; deltas of
+    different requests interleave with the continuous batch).
+    kind == "done": ``completion`` is the request's final ``Completion``
+    (its ``tokens`` are exactly the deltas streamed before it).
+    """
+    kind: str                        # "delta" | "done"
+    req_idx: int
+    id: Optional[str]
+    token: Optional[int] = None
+    completion: Optional["Completion"] = None
+
+
+@dataclass(frozen=True)
 class Completion:
     """The engine's answer to one Request."""
     id: Optional[str]

@@ -1,4 +1,4 @@
-"""The serving engine: continuous batching over a slot-based cache pool.
+"""The serving engine: continuous batching over a contiguous or paged cache pool.
 
 ``Engine.generate(requests)`` runs prefill-on-admit + a fused multi-token
 decode inner loop:
@@ -30,7 +30,7 @@ with adversarially varied prompt lengths should quantize lengths upstream.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Iterator, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,8 +43,9 @@ from repro.obs.metrics import DEPTH_BUCKETS, TTFT_MS_BUCKETS
 from repro.obs.registry import MetricsRegistry
 from repro.obs.trace import TID_LOOP, TID_REQ0, Tracer
 from repro.serve import sampling, staged
-from repro.serve.api import Completion, Request
-from repro.serve.kv_cache import CachePool, place_rows
+from repro.serve.api import Completion, Request, StreamEvent
+from repro.serve.kv_cache import (GARBAGE_BLOCK, CachePool, PagedCachePool,
+                                  place_blocks, place_rows)
 from repro.serve.scheduler import Scheduler
 
 
@@ -59,7 +60,8 @@ class Engine:
                  max_cache_tokens: Optional[int] = None, clock=None,
                  metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None,
-                 event_log: Optional[EventLog] = None, sleep=None):
+                 event_log: Optional[EventLog] = None, sleep=None,
+                 paged: bool = False, block_size: int = 16):
         """precision: optional repro.precision preset name or PrecisionPolicy
         — re-dtypes the serving compute path (activations + the slot cache
         pool run in the policy's compute dtype; params keep their storage
@@ -85,7 +87,14 @@ class Engine:
         event_log — structured event stream shared with the scheduler;
         defaults to the process-wide ``obs.default_log()``.
         sleep — injectable ``time.sleep`` substitute, used only by the
-        open-loop ``arrivals=`` path in ``generate``."""
+        open-loop ``arrivals=`` path in ``generate``.
+
+        paged — serve from a block-paged cache (``PagedCachePool``):
+        attention K/V pages over ``block_size``-token physical blocks with
+        per-request block tables, ``max_cache_tokens`` becomes an exact
+        total-token budget shared by all in-flight requests, and common
+        prompt prefixes are prefilled once (shared-prefix reuse).  OFF by
+        default — the contiguous path is byte-identical to before."""
         if precision is not None:
             from repro.precision import get_policy
             cfg = get_policy(precision).apply_to_model(cfg)
@@ -104,6 +113,8 @@ class Engine:
         self.cfg = cfg
         self.max_slots = max_slots
         self.decode_block = decode_block
+        self.paged = paged
+        self.block_size = block_size
         self.plan = plan
         self.policy = policy
         if plan is not None:
@@ -162,6 +173,18 @@ class Engine:
             "serve_peak_slots_busy", help="max concurrent active slots")
         self._cache_tokens = metrics.gauge(
             "serve_cache_tokens", help="cache-pool length, tokens per slot")
+        if self.paged:
+            # block-utilization series exist only on paged engines, so a
+            # contiguous engine's metric/report surface is unchanged
+            self._blocks_busy = metrics.histogram(
+                "serve_blocks_busy", DEPTH_BUCKETS,
+                help="allocated cache blocks sampled at each decode sync")
+            self._peak_blocks = metrics.gauge(
+                "serve_peak_blocks_busy",
+                help="max concurrently allocated cache blocks")
+            self._prefix_hits = metrics.counter(
+                "serve_prefix_hits_total",
+                help="prompt blocks reused via shared-prefix registry")
 
     @property
     def stats(self) -> Dict[str, int]:
@@ -176,11 +199,11 @@ class Engine:
 
     # -- forward fns (plain vs staged) --------------------------------------
 
-    def _decode_fn(self, params, cache, tok, pos):
+    def _decode_fn(self, params, cache, tok, pos, paged=None):
         if self.plan is not None:
             return staged.staged_decode_step(self.cfg, self.plan, params,
-                                             cache, tok, pos)
-        return M.decode_step(self.cfg, params, cache, tok, pos)
+                                             cache, tok, pos, paged=paged)
+        return M.decode_step(self.cfg, params, cache, tok, pos, paged=paged)
 
     def _prefill_fn(self, params, batch, cache_len):
         if self.plan is not None:
@@ -191,15 +214,21 @@ class Engine:
     def _admit_step(self, bshape, cache_len: int, mode: str):
         """ONE jitted call per admitted group: prefill + first-token sample +
         cache-pool scatter + per-slot state scatter (cached per group shape).
+
+        Paged engines append a ``write_rows`` (R, nb) physical-block arg and
+        scatter attention K/V via ``place_blocks`` (shared-prefix rows point
+        at the garbage block); everything else is identical.
         """
-        key = (bshape, cache_len, mode)
+        key = (("paged", bshape, cache_len, mode) if self.paged
+               else (bshape, cache_len, mode))
         fn = self._prefill_jit.get(key)
         if fn is not None:
             return fn
         vs = self.cfg.vocab_size
+        bs = self.block_size
 
         def admit(params, batch, pool_cache, tok, pos, keys, temps, tks,
-                  tps, slots, seeds, g_temps, g_tks, g_tps):
+                  tps, slots, seeds, g_temps, g_tks, g_tps, *rest):
             logits, group_cache, p1 = self._prefill_fn(params, batch,
                                                        cache_len)
             k0s, s0s = sampling.split_keys(
@@ -208,7 +237,11 @@ class Engine:
             # activation compute dtype (precision-policy contract)
             t0 = sampling.sample_tokens(logits[:, :vs].astype(jnp.float32),
                                         s0s, g_temps, g_tks, g_tps, mode=mode)
-            pool_cache = place_rows(pool_cache, group_cache, slots)
+            if self.paged:
+                pool_cache = place_blocks(pool_cache, group_cache, slots,
+                                          rest[0], block_size=bs)
+            else:
+                pool_cache = place_rows(pool_cache, group_cache, slots)
             tok = tok.at[slots].set(t0)
             pos = pos.at[slots].set(p1)
             keys = keys.at[slots].set(k0s)
@@ -221,17 +254,25 @@ class Engine:
         fn = self._prefill_jit[key] = jax.jit(admit, donate_argnums=donate)
         return fn
 
-    def _decode_chunk(self, n: int, mode: str):
-        """Jitted scan of n fused decode+sample steps (cached per n, mode)."""
-        fn = self._decode_jit.get((n, mode))
+    def _decode_chunk(self, n: int, mode: str, lc: Optional[int] = None):
+        """Jitted scan of n fused decode+sample steps (cached per n, mode).
+
+        Paged engines append the (n_slots, nb) block-table arg and key the
+        cache on ``lc`` too (the logical cache length is baked into the
+        traced program as the attention ring modulus / validity bound)."""
+        key = ("paged", n, mode, lc) if self.paged else (n, mode)
+        fn = self._decode_jit.get(key)
         if fn is not None:
             return fn
         vs = self.cfg.vocab_size
+        paged_mode = self.paged
 
-        def chunk(params, cache, tok, pos, keys, temps, tks, tps):
+        def chunk(params, cache, tok, pos, keys, temps, tks, tps, *rest):
             def body(carry, _):
                 cache, tok, pos, keys = carry
-                logits, cache = self._decode_fn(params, cache, tok, pos)
+                paged = (rest[0], lc) if paged_mode else None
+                logits, cache = self._decode_fn(params, cache, tok, pos,
+                                                paged=paged)
                 if mode != "greedy":
                     keys, sub = sampling.split_keys(keys)
                 else:
@@ -246,8 +287,7 @@ class Engine:
             return cache, tok, pos, keys, toks
 
         donate = (1, 2, 3, 4) if self._donate else ()
-        fn = self._decode_jit[(n, mode)] = jax.jit(chunk,
-                                                   donate_argnums=donate)
+        fn = self._decode_jit[key] = jax.jit(chunk, donate_argnums=donate)
         return fn
 
     # -- request plumbing ---------------------------------------------------
@@ -290,8 +330,14 @@ class Engine:
             need_len = min(need_len, self.max_cache_tokens)
         if self._pool is None or self._pool.cache_len < need_len:
             size = -(-need_len // 32) * 32
-            self._pool = CachePool(self.cfg, self.max_slots, size,
-                                   policy=self.policy)
+            if self.paged:
+                self._pool = PagedCachePool(
+                    self.cfg, self.max_slots, size,
+                    block_size=self.block_size,
+                    max_tokens=self.max_cache_tokens, policy=self.policy)
+            else:
+                self._pool = CachePool(self.cfg, self.max_slots, size,
+                                       policy=self.policy)
         return self._pool
 
     def _chunk_len(self, remaining: int) -> int:
@@ -320,8 +366,25 @@ class Engine:
         the injectable ``sleep``) when all slots are idle and the next
         arrival is in the future.  ``None`` (default) is the legacy
         closed-loop path: everything arrives at once."""
+        done: Dict[int, Completion] = {}
+        for ev in self.stream(requests, cache_len=cache_len,
+                              arrivals=arrivals):
+            if ev.kind == "done":
+                done[ev.req_idx] = ev.completion
+        return [done[i] for i in range(len(requests))]
+
+    def stream(self, requests: Sequence[Request],
+               cache_len: Optional[int] = None,
+               arrivals: Optional[Sequence[float]] = None
+               ) -> Iterator[StreamEvent]:
+        """Streaming form of ``generate``: yields a "delta" ``StreamEvent``
+        per generated token (in emission order; different requests
+        interleave) and one "done" event per request carrying its final
+        ``Completion``.  TTFT can be measured on the first "delta" of a
+        request instead of waiting for the whole batch.  ``generate`` is a
+        thin wrapper that collects the "done" events."""
         if not requests:
-            return []
+            return
         if arrivals is not None and len(arrivals) != len(requests):
             raise ValueError("arrivals must align 1:1 with requests")
         n_slots = self.max_slots
@@ -342,7 +405,19 @@ class Engine:
         sched = self.scheduler = Scheduler(
             n_slots, max_queue_wait_ms=self.max_queue_wait_ms,
             event_log=self.event_log)
+        paged = self.paged
         done: Dict[int, Completion] = {}
+        evq: List[StreamEvent] = []          # events pending the next yield
+
+        def flush() -> List[StreamEvent]:
+            out = evq[:]
+            evq.clear()
+            return out
+
+        def ev_done(req_idx: int, r, comp: Completion) -> None:
+            done[req_idx] = comp
+            evq.append(StreamEvent("done", req_idx, r.id, completion=comp))
+
         accepted: List[Request] = []
         now0 = self._clock()
         self.event_log.emit("generate_begin", n=len(requests))
@@ -351,23 +426,30 @@ class Engine:
                     and span(r) > self.max_cache_tokens:
                 # cache-pressure admission control: this request could never
                 # fit a slot of the capped pool — shed it up front, loudly
-                done[i] = completion(r, (), "rejected")
+                ev_done(i, r, completion(r, (), "rejected"))
                 self._rejected.inc(1, reason="cache")
                 self.event_log.emit("reject", req=i)
             elif r.gen.max_new_tokens <= 0:    # prefill-only: nothing to emit
-                done[i] = completion(r, (), "length")
+                ev_done(i, r, completion(r, (), "length"))
             else:
                 t = now0 + (arrivals[i] if arrivals is not None else 0.0)
                 sched.submit(i, r, t)
                 accepted.append(r)
+        yield from flush()
         if not accepted:
             self.event_log.emit("generate_end", n=len(requests))
-            return [done[i] for i in range(len(requests))]
+            return
         # pools are reusable without zeroing: admission fully overwrites a
         # slot before it decodes, and free slots never reach a Completion
         pool = self._pool_for(max(cache_len or 0,
                                   self._cache_len_for(accepted)))
         cache_len = pool.cache_len
+        if paged:
+            # host-side block tables: one row per slot, garbage-padded; free
+            # slots stay all-garbage so their (ignored) decode writes land
+            # in the garbage block
+            tables = np.zeros((n_slots, pool.blocks_per_slot), np.int32)
+            lc = pool.attn_len
 
         tok = jnp.zeros((n_slots,), jnp.int32)
         pos = jnp.zeros((n_slots,), jnp.int32)
@@ -387,8 +469,12 @@ class Engine:
         def finish(slot: int, reason: str) -> None:
             st = sched.retire(slot)
             st.finish_reason = reason
-            done[st.req_idx] = completion(st.request, tuple(st.emitted),
-                                          reason)
+            ev_done(st.req_idx, st.request,
+                    completion(st.request, tuple(st.emitted), reason))
+            if paged and st.blocks is not None:
+                pool.release(st.blocks)     # last owner frees the blocks
+                tables[slot] = GARBAGE_BLOCK
+                st.blocks = None
             self._tokens.inc(len(st.emitted))
             t_adm = admit_t.pop(st.req_idx, None)
             if t_adm is not None:
@@ -406,7 +492,7 @@ class Engine:
                 return
             now = self._clock()
             for req_idx, r in sched.expire_queued(now):
-                done[req_idx] = completion(r, (), "rejected")
+                ev_done(req_idx, r, completion(r, (), "rejected"))
                 self._rejected.inc(1, reason="queue")
                 self.tracer.instant(f"req {req_idx} shed", ts=now,
                                     cat="request", tid=TID_REQ0 + req_idx)
@@ -414,15 +500,25 @@ class Engine:
                 finish(slot, "rejected")
                 self._rejected.inc(1, reason="deadline")
 
-        def admit_group(items) -> None:
+        def admit_group(items, allocs=None) -> None:
             """Admit same-prompt-length requests via ONE jitted batched
-            prefill+sample+scatter call."""
+            prefill+sample+scatter call.  ``allocs`` (paged mode) carries
+            each request's ``PagedAlloc``, already reserved by
+            ``admit_ready``."""
             nonlocal tok, pos, keys, temps, tks, tps
             reqs = [r for _, r, _ in items]
             batch = self._request_batch(reqs)
             t_adm = self._clock()
             slots = [sched.admit(i, r, batch["tokens"].shape[1], arrival=t)
                      for i, r, t in items]
+            if paged:
+                wrows = []
+                for slot, alloc in zip(slots, allocs):
+                    sched.active[slot].blocks = alloc.ids
+                    tables[slot] = pool.table_row(alloc)
+                    wrows.append(pool.write_row(alloc))
+                    if alloc.n_shared:
+                        self._prefix_hits.inc(alloc.n_shared)
             for i, _, t in items:
                 admit_t[i] = t_adm
                 self.tracer.add_span(f"req {i} queued", t, t_adm - t,
@@ -430,22 +526,27 @@ class Engine:
             step = self._admit_step(batch["tokens"].shape, cache_len, mode)
             with self.tracer.span("admit", cat="serve", tid=TID_LOOP,
                                   batch=len(reqs)):
-                pool.cache, tok, pos, keys, temps, tks, tps, t0 = step(
+                args = [
                     self.params, batch, pool.cache, tok, pos, keys, temps,
                     tks, tps, jnp.asarray(slots, jnp.int32),
                     jnp.asarray([r.gen.seed for r in reqs], jnp.uint32),
                     jnp.asarray([r.gen.temperature for r in reqs],
                                 jnp.float32),
                     jnp.asarray([r.gen.top_k for r in reqs], jnp.int32),
-                    jnp.asarray([r.gen.top_p for r in reqs], jnp.float32))
+                    jnp.asarray([r.gen.top_p for r in reqs], jnp.float32)]
+                if paged:
+                    args.append(jnp.asarray(wrows, jnp.int32))
+                pool.cache, tok, pos, keys, temps, tks, tps, t0 = step(*args)
                 t0h = np.asarray(t0)     # the sync: first tokens are real
             now = self._clock()
             for _, _, t in items:        # TTFT measured at the sync point
                 self._ttft.observe((now - t) * 1000.0)
             for row, (slot, (i, r, _)) in enumerate(zip(slots, items)):
                 g = r.gen
-                sched.active[slot].emitted.append(int(t0h[row]))
-                if g.eos_id is not None and int(t0h[row]) == g.eos_id:
+                tv = int(t0h[row])
+                sched.active[slot].emitted.append(tv)
+                evq.append(StreamEvent("delta", i, r.id, token=tv))
+                if g.eos_id is not None and tv == g.eos_id:
                     finish(slot, "eos")
                 elif g.max_new_tokens <= 1:
                     finish(slot, "length")
@@ -456,15 +557,54 @@ class Engine:
                 take = sched.take(len(sched.free), now=now)
                 if not take:         # head of queue hasn't arrived yet
                     break
-                groups: Dict[int, list] = {}
-                for i, r, t in take:
-                    plen = np.asarray(r.tokens).reshape(-1).shape[0]
-                    groups.setdefault(plen, []).append((i, r, t))
-                for items in groups.values():
-                    admit_group(items)
+                stalled = False
+                if paged:
+                    # block-granular admission control: reserve each
+                    # request's blocks (shared-prefix lookup included)
+                    # before it reaches a slot; when blocks run out the
+                    # tail goes back to the queue head (FIFO preserved)
+                    # and waits for the next retirement
+                    admitted: List[Any] = []
+                    allocs: List[Any] = []
+                    for j, (i, r, t) in enumerate(take):
+                        ptoks = np.asarray(r.tokens,
+                                           np.int32).reshape(-1).tolist()
+                        alloc = pool.allocate(ptoks, span(r))
+                        if alloc is None:
+                            if pool.allocator.n_used == 0:
+                                # alone with every block free and still no
+                                # fit — this request can NEVER be served
+                                # under the block budget; shed it instead
+                                # of deadlocking the queue
+                                ev_done(i, r, completion(r, (), "rejected"))
+                                self._rejected.inc(1, reason="cache")
+                                self.event_log.emit("reject", req=i)
+                                continue
+                            sched.requeue_front(take[j:])
+                            stalled = True
+                            break
+                        admitted.append((i, r, t))
+                        allocs.append(alloc)
+                    groups: Dict[int, list] = {}
+                    for item, alloc in zip(admitted, allocs):
+                        plen = np.asarray(item[1].tokens).reshape(-1).shape[0]
+                        groups.setdefault(plen, []).append((item, alloc))
+                    for pairs in groups.values():
+                        admit_group([it for it, _ in pairs],
+                                    [al for _, al in pairs])
+                else:
+                    groups = {}
+                    for i, r, t in take:
+                        plen = np.asarray(r.tokens).reshape(-1).shape[0]
+                        groups.setdefault(plen, []).append((i, r, t))
+                    for items in groups.values():
+                        admit_group(items)
+                if stalled:
+                    break
 
         shed()
         admit_ready()
+        yield from flush()
         while sched.active or sched.queued():
             if not sched.active:
                 # open-loop idle: nothing in flight and the next arrival is
@@ -477,22 +617,32 @@ class Engine:
                     self._sleep(gap)
                 shed()
                 admit_ready()
+                yield from flush()
                 continue
             self._queue_depth.observe(sched.queued())
             self._slots_busy.observe(len(sched.active))
+            if paged:
+                self._blocks_busy.observe(pool.allocator.n_used)
             n = self._chunk_len(sched.min_remaining())
-            step = self._decode_chunk(n, mode)
+            step = (self._decode_chunk(n, mode, lc) if paged
+                    else self._decode_chunk(n, mode))
             with self.tracer.span(f"decode[{n}]", cat="serve", tid=TID_LOOP,
                                   active=len(sched.active)):
-                pool.cache, tok, pos, keys, toks = step(
-                    self.params, pool.cache, tok, pos, keys, temps, tks, tps)
+                args = [self.params, pool.cache, tok, pos, keys, temps, tks,
+                        tps]
+                if paged:
+                    args.append(jnp.asarray(tables))
+                pool.cache, tok, pos, keys, toks = step(*args)
                 toks_h = np.asarray(toks)                  # (n, n_slots)
             for slot in list(sched.active):
                 st = sched.active[slot]
                 eos = st.request.gen.eos_id
                 for t in toks_h[:, slot]:
-                    st.emitted.append(int(t))
-                    if eos is not None and int(t) == eos:
+                    tv = int(t)
+                    st.emitted.append(tv)
+                    evq.append(StreamEvent("delta", st.req_idx,
+                                           st.request.id, token=tv))
+                    if eos is not None and tv == eos:
                         finish(slot, "eos")
                         break
                     if st.remaining <= 0:
@@ -500,9 +650,12 @@ class Engine:
                         break
             shed()
             admit_ready()
+            yield from flush()
         self._peak_slots.set_max(sched.max_concurrent)
         self._cache_tokens.set(pool.cache_len)
+        if paged:
+            self._peak_blocks.set_max(pool.allocator.peak_used)
         self.metrics.drain()         # flush boundary (idempotent, host-only)
         self.event_log.emit("generate_end", n=len(requests),
                             completed=len(done))
-        return [done[i] for i in range(len(requests))]
+        yield from flush()

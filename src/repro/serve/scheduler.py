@@ -38,6 +38,9 @@ class SlotState:
     emitted: List[int] = field(default_factory=list)
     finish_reason: Optional[str] = None
     arrival: float = 0.0             # submission time (deadline epoch)
+    # physical cache block ids owned by this request (paged pool only) —
+    # the engine releases them back to the BlockAllocator at retirement
+    blocks: Optional[Tuple[int, ...]] = None
 
     @property
     def remaining(self) -> int:
@@ -74,14 +77,29 @@ class Scheduler:
     def take(self, n: int,
              now: Optional[float] = None) -> List[Tuple[int, Any, float]]:
         """Pop up to ``n`` queued entries in arrival order.  With ``now``
-        (open-loop traffic), stop at the first entry whose stamped
-        submission time is still in the future — it hasn't arrived yet."""
-        out: List[Tuple[int, Any, float]] = []
-        while self.queue and len(out) < n:
-            if now is not None and self.queue[0][2] > now:
-                break
-            out.append(self.queue.popleft())
+        (open-loop traffic), only entries whose stamped submission time has
+        passed are eligible — and ALL of them are scanned, not just a
+        prefix: a future-stamped head (out-of-order ``submit``) must not
+        starve an already-arrived entry queued behind it."""
+        if now is None:
+            out: List[Tuple[int, Any, float]] = []
+            while self.queue and len(out) < n:
+                out.append(self.queue.popleft())
+            return out
+        arrived = [e for e in self.queue if e[2] <= now]
+        arrived.sort(key=lambda e: e[2])  # stable: FIFO within equal stamps
+        out = arrived[:n]
+        taken = {id(e) for e in out}
+        self.queue = deque(e for e in self.queue if id(e) not in taken)
         return out
+
+    def requeue_front(self,
+                      entries: List[Tuple[int, Any, float]]) -> None:
+        """Push taken entries back to the head (original order preserved) —
+        used when paged-cache admission runs out of free blocks mid-batch
+        and the tail of a ``take`` must wait for the next retirement."""
+        for e in reversed(entries):
+            self.queue.appendleft(e)
 
     def next_arrival(self) -> Optional[float]:
         """Earliest stamped submission time still queued (None if empty)."""
@@ -141,7 +159,12 @@ class Scheduler:
 
     def min_remaining(self) -> int:
         """Tokens until the nearest guaranteed retirement (schedules the
-        fused-decode chunk length)."""
+        fused-decode chunk length).  Returns 0 when no slot is active —
+        e.g. every active slot was shed mid-tick by ``overdue_active`` —
+        so the engine idles to the next arrival instead of dying on a
+        ``min()`` of an empty sequence."""
+        if not self.active:
+            return 0
         return min(st.remaining for st in self.active.values())
 
     def _check(self) -> None:

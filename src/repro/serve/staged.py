@@ -81,14 +81,17 @@ def staged_prefill(cfg, plan, stage_params, batch, cache_len):
     return logits, cache, jnp.int32(s)
 
 
-def staged_decode_step(cfg, plan, stage_params, cache, tok, pos):
+def staged_decode_step(cfg, plan, stage_params, cache, tok, pos, paged=None):
     """One decode step through the stage chain. Same contract as
-    ``model.decode_step`` (pos: scalar or per-request vector)."""
+    ``model.decode_step`` (pos: scalar or per-request vector; ``paged``
+    routes attention K/V through one block table shared by every stage —
+    the paged leaves keep the leading G axis, so stage slices still work)."""
     x, rope_cs = M.decode_embed(cfg, stage_params[0], tok, pos)
     new_parts = []
     for k in range(plan.n_stages):
         x, nc = M.decode_groups(cfg, stage_params[k]["groups"],
-                                _stage_cache(plan, k, cache), x, rope_cs, pos)
+                                _stage_cache(plan, k, cache), x, rope_cs, pos,
+                                paged=paged)
         new_parts.append(nc)
     new_cache = jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate(xs, axis=0), *new_parts)

@@ -217,6 +217,46 @@ def _staged_vs_joined(ctx: Context):
     return [c.tokens for c in joined], [c.tokens for c in staged]
 
 
+@register("serve/paged_vs_contiguous",
+          "Block-paged cache pool (block tables, shared-prefix reuse, "
+          "garbage block) == the contiguous slot pool, token-identical — "
+          "flat and sliding-window attention, joined and staged",
+          TokensEqual(), tags=("serve",), arch_aware=True)
+def _paged_vs_contiguous(ctx: Context):
+    import numpy as np
+
+    from repro.core import partition
+    from repro.serve import Engine, Request
+    cfg, params, reqs = _serve_world(ctx)
+    # a shared-prefix pair: same leading 8 tokens (two full 4-token
+    # blocks), so the second admission increfs the first one's blocks
+    t0 = np.asarray(reqs[0].tokens, np.int32).reshape(-1)
+    t1 = np.concatenate([t0[:8],
+                         np.asarray(reqs[1].tokens, np.int32).reshape(-1)])
+    reqs = list(reqs) + [Request(tokens=t1.tolist(), gen=reqs[1].gen)]
+    want, got = [], []
+
+    def run(paged_engine, contiguous_engine):
+        want.extend(c.tokens for c in contiguous_engine.generate(reqs))
+        got.extend(c.tokens for c in paged_engine.generate(reqs))
+
+    run(Engine(cfg, params, max_slots=2, decode_block=4, paged=True,
+               block_size=4),
+        Engine(cfg, params, max_slots=2, decode_block=4))
+    cfgw = scenarios.serve_cfg(ctx.arch, window=8)
+    run(Engine(cfgw, params, max_slots=2, decode_block=4, paged=True,
+               block_size=4),
+        Engine(cfgw, params, max_slots=2, decode_block=4))
+    plan = partition.make_plan(cfg, 2)
+    sp = [partition.slice_stage_params(cfg, plan, params, k)
+          for k in range(plan.n_stages)]
+    run(Engine(cfg, plan=plan, stage_params=sp, max_slots=2, decode_block=4,
+               paged=True, block_size=4),
+        Engine(cfg, plan=plan, stage_params=sp, max_slots=2,
+               decode_block=4))
+    return want, got
+
+
 # ==========================================================================
 # precision: bf16 compute under the PrecisionPolicy reaches fp32 accuracy
 # ==========================================================================

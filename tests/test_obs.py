@@ -81,7 +81,26 @@ def test_histogram_percentiles_vs_numpy():
     assert abs(h.mean - vals.mean()) < 1e-6 * vals.mean() + 1e-9
 
 
-def test_histogram_empty_and_edge_validation():
+def test_histogram_underflow_bucket_bounded_by_extrema():
+    """Every observation below edges[0] (sub-ms TTFTs under a 1 ms first
+    edge): percentiles interpolate inside [min, max] via the tracked
+    extrema instead of reporting the unrelated first edge."""
+    rng = np.random.default_rng(2)
+    vals = rng.uniform(0.05, 0.4, size=500)      # all under the 1.0 edge
+    h = Histogram("ttft", (1.0, 2.5, 5.0))
+    for v in vals:
+        h.observe(v)
+    assert h.counts[0] == 500                    # everything underflowed
+    for q in (50, 90, 99):
+        est, exact = h.percentile(q), float(np.percentile(vals, q))
+        assert h.min <= est <= h.max             # bounded by the extrema
+        assert abs(est - exact) <= (h.max - h.min)   # one-bucket error
+    s = h.summary()
+    assert s["min"] == h.min and s["max"] == h.max
+    # single observation: every percentile IS that value
+    one = Histogram("one", (1.0, 2.5))
+    one.observe(0.125)
+    assert one.percentile(50) == one.percentile(99) == 0.125
     h = Histogram("x", (1.0, 2.0))
     assert h.percentile(50) is None and h.mean is None
     assert h.summary()["count"] == 0

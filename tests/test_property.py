@@ -311,6 +311,55 @@ def test_plan_invariants_hold_for_every_arch(arch):
         <= _bottleneck(table, uniform_bounds(g, k)) + 1e-9
 
 
+@given(n_blocks=st.integers(2, 12),
+       ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 4),
+                              st.integers(0, 6)),
+                    min_size=1, max_size=80))
+@settings(max_examples=40, deadline=None)
+def test_block_allocator_random_interleavings(n_blocks, ops):
+    """Any interleaving of alloc / share (incref) / release over the paged
+    BlockAllocator preserves the partition invariant (every non-garbage
+    block is free with 0 refs or live with > 0, exactly once), never
+    double-owns a block across live allocations' fresh sets, and returns
+    blocks to the free pool exactly when the LAST owner retires."""
+    from repro.serve.kv_cache import BlockAllocator, GARBAGE_BLOCK
+    a = BlockAllocator(n_blocks, block_size=4)
+    live = []                                  # [(ids, owners)]
+    for kind, n, pick in ops:
+        if kind == 0:                          # alloc n fresh blocks
+            ids = a.alloc(n)
+            if n > a.n_free + (len(ids) if ids else 0):
+                assert ids is None             # all-or-nothing
+            if ids is not None:
+                assert GARBAGE_BLOCK not in ids
+                owned = {i for blk, _ in live for i in blk}
+                assert not owned & set(ids)    # never double-owned
+                live.append((tuple(ids), 1))
+        elif kind == 1 and live:               # share an existing alloc
+            ids, owners = live[pick % len(live)]
+            a.incref(ids)
+            live[pick % len(live)] = (ids, owners + 1)
+        elif kind == 2 and live:               # release one owner
+            j = pick % len(live)
+            ids, owners = live.pop(j)
+            released = a.free(ids)
+            if owners > 1:
+                assert released == []          # co-owners keep it live
+                live.append((ids, owners - 1))
+            else:
+                assert set(released) == set(ids)   # last retire frees all
+                assert all(a.refcount[i] == 0 for i in ids)
+        a.check()
+    held = sum(len(ids) for ids, _ in live)
+    # distinct blocks, since shares reuse the same tuple
+    assert a.n_used == len({i for ids, _ in live for i in ids})
+    assert a.peak_used <= a.n_blocks - 1 and held >= a.n_used
+    for ids, owners in live:
+        a.free(ids * owners) if owners > 1 else a.free(ids)
+    assert a.n_used == 0 and a.n_free == a.n_blocks - 1
+    a.check()
+
+
 @given(seq=st.integers(1, 64), window=st.sampled_from([0, 8, 16]))
 @settings(max_examples=15, deadline=None)
 def test_chunked_attention_matches_naive(seq, window):
